@@ -1,0 +1,27 @@
+"""Interesting orderings end-to-end (paper §6.4): INTERSECT DISTINCT via
+sort-based vs hash-based plans, with exact spill accounting.
+
+Run:  PYTHONPATH=src python examples/intersect_warehouse.py
+"""
+import numpy as np
+
+from repro.core import ExecConfig, intersect_distinct
+
+rng = np.random.default_rng(1)
+I = 500_000
+a = rng.integers(0, 60_000, I).astype(np.uint32)
+b = rng.integers(30_000, 90_000, I).astype(np.uint32)
+cfg = ExecConfig(memory_rows=32_768, page_rows=2_048, fanin=16,
+                 batch_rows=8_192)
+
+out_s, st_s = intersect_distinct(a, b, cfg, algorithm="insort",
+                                 output_estimate=60_000)
+out_h, st_h = intersect_distinct(a, b, cfg, algorithm="hash",
+                                 output_estimate=60_000)
+ks = np.asarray(out_s); ks = ks[ks != np.uint32(0xFFFFFFFF)]
+print(f"|A ∩ B| = {len(ks):,}")
+print(f"sort-based plan spill: {st_s.total_spill_rows:,} rows "
+      f"(each input row spills ≤ once; merge join reads sorted streams)")
+print(f"hash-based plan spill: {st_h.total_spill_rows:,} rows "
+      f"(DISTINCT twice + join build/probe spill)")
+print(f"ratio: {st_h.total_spill_rows / max(1, st_s.total_spill_rows):.2f}×")

@@ -1,0 +1,47 @@
+"""Sort-based MoE dispatch (the paper's technique inside the model).
+
+Compares the dense one-hot dispatch against the paper's sorted grouping
+on a qwen3-style MoE block, on CPU with real arrays: identical outputs,
+and the sorted path's dispatch tensor is E×C×D (capacity-bounded) versus
+dense's E×T×D.
+
+Run:  PYTHONPATH=src python examples/moe_sorted_dispatch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models import moe as MOE
+
+cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+key = jax.random.PRNGKey(0)
+params, _ = M.init(cfg, key)
+moe_p = jax.tree.map(lambda a: a[0], params["layers"])["moe"]
+
+B, S = 8, 256
+x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+
+dense = jax.jit(lambda p, x: MOE.moe_block(p, cfg, x, dispatch="dense")[0])
+sorted_ = jax.jit(lambda p, x: MOE.moe_block(p, cfg, x, dispatch="sorted")[0])
+
+y_dense = dense(moe_p, x)
+y_sorted = sorted_(moe_p, x)
+err = float(jnp.abs(y_dense - y_sorted).max())
+print(f"max |dense − sorted| = {err:.2e}")
+
+for name, fn in [("dense", dense), ("sorted", sorted_)]:
+    fn(moe_p, x).block_until_ready()
+    t0 = time.time()
+    for _ in range(10):
+        fn(moe_p, x).block_until_ready()
+    print(f"{name:7s}: {(time.time()-t0)/10*1e3:7.2f} ms  "
+          f"(E={cfg.moe.num_experts}, T={B*S}, top-{cfg.moe.top_k})")
+
+e, t, d = cfg.moe.num_experts, B * S, cfg.d_model
+cap = int(cfg.moe.capacity_factor * t * cfg.moe.top_k / e + 7) // 8 * 8
+print(f"dispatch tensor rows: dense E×T = {e*t:,} vs sorted E×C = {e*cap:,} "
+      f"({e*t/(e*cap):.0f}× smaller)")

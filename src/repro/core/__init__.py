@@ -1,0 +1,49 @@
+"""repro.core — sort-based duplicate removal, grouping, and aggregation.
+
+The paper's contribution (Do & Graefe: early aggregation during run
+generation + wide merging in the final merge step) as a composable JAX
+module, plus the baselines it is measured against.
+"""
+from repro.core.types import AggState, ExecConfig, SpillStats, EMPTY, MAX_KEY
+from repro.core.sorted_ops import sorted_groupby, finalize, sort_state, segmented_combine, merge_absorb
+from repro.core.insort import insort_aggregate, sort_then_stream_aggregate
+from repro.core.hash_agg import hash_aggregate, f1_hash_aggregate
+from repro.core.instream import instream_aggregate
+from repro.core.operators import (
+    group_by,
+    distinct,
+    group_by_order_by,
+    count_and_count_distinct,
+    rollup,
+    intersect_distinct,
+    pack_keys,
+    unpack_keys,
+)
+from repro.core import cost_model
+
+__all__ = [
+    "AggState",
+    "ExecConfig",
+    "SpillStats",
+    "EMPTY",
+    "MAX_KEY",
+    "sorted_groupby",
+    "finalize",
+    "sort_state",
+    "segmented_combine",
+    "merge_absorb",
+    "insort_aggregate",
+    "sort_then_stream_aggregate",
+    "hash_aggregate",
+    "f1_hash_aggregate",
+    "instream_aggregate",
+    "group_by",
+    "distinct",
+    "group_by_order_by",
+    "count_and_count_distinct",
+    "rollup",
+    "intersect_distinct",
+    "pack_keys",
+    "unpack_keys",
+    "cost_model",
+]

@@ -1,0 +1,179 @@
+"""Hash-aggregation baselines the paper compares against.
+
+Two variants, both with exact spill accounting:
+
+* ``hash_aggregate``      — textbook hybrid hash aggregation: an in-memory
+  table absorbs matches; on overflow the key space is hash-partitioned
+  into F spill partitions per level, recursively, until a partition's
+  output fits memory (Examples 3/4/5, Fig 23/24 "hash + hybrid hashing").
+  A resident fraction of the hash domain stays in memory (hybrid hashing),
+  absorbing ~M/O of the input before any spill.
+
+* ``f1_hash_aggregate``   — F1 Query's pre-paper production scheme (§5,
+  Figs 17/18): "hash-based early aggregation in a sort-based spilling
+  approach" [4] — the overflowing hash table is *sorted and written as a
+  run*; runs are merged with traditional non-aggregating merge steps and
+  duplicates are removed only in the final merge.
+
+Hashing uses a fixed odd multiplicative constant, a **bijection** on
+uint32 — so equality on hashes is equality on keys, spelling out the
+paper's observation that "hashing is in fact equivalent to sorting by hash
+value" [25]: the machinery below literally reuses the ordered-index
+primitives on hashed keys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import merge as merge_mod
+from repro.core import run_generation as rg
+from repro.core import sorted_ops
+from repro.core.types import AggState, ExecConfig, SpillStats, EMPTY
+
+_KNUTH = np.uint32(2654435761)
+_KNUTH_INV = np.uint32(pow(int(_KNUTH), -1, 1 << 32))
+
+
+def hash_u32(keys):
+    return (keys.astype(jnp.uint32) * _KNUTH).astype(jnp.uint32)
+
+
+def unhash_u32(hkeys):
+    return (hkeys.astype(jnp.uint32) * _KNUTH_INV).astype(jnp.uint32)
+
+
+def _np_hash(keys: np.ndarray) -> np.ndarray:
+    return (keys.astype(np.uint64) * np.uint64(int(_KNUTH)) % (1 << 32)).astype(
+        np.uint32
+    )
+
+
+def _np_unhash(hkeys: np.ndarray) -> np.ndarray:
+    return (hkeys.astype(np.uint64) * np.uint64(int(_KNUTH_INV)) % (1 << 32)).astype(
+        np.uint32
+    )
+
+
+def _in_memory_agg(keys_h, payload, backend):
+    return sorted_ops.sorted_groupby(jnp.asarray(keys_h), payload, backend=backend)
+
+
+def hash_aggregate(
+    keys: np.ndarray,
+    payload: np.ndarray | None = None,
+    cfg: ExecConfig | None = None,
+    *,
+    output_estimate: int | None = None,
+    hybrid: bool = True,
+    backend: str = "xla",
+) -> tuple[AggState, SpillStats]:
+    """Hybrid hash aggregation with recursive overflow partitioning.
+
+    Result keys are returned un-hashed but the state is ordered by hash —
+    i.e. *not* usefully sorted for downstream consumers, which is exactly
+    the interesting-orderings deficit the paper's operator removes.
+    """
+    cfg = cfg or ExecConfig()
+    stats = SpillStats()
+    keys = np.asarray(keys, dtype=np.uint32)
+    if payload is not None:
+        payload = np.asarray(payload, dtype=np.float32)
+        if payload.ndim == 1:
+            payload = payload[:, None]
+    mask = keys != EMPTY  # sentinel rows are not data
+    if not mask.all():
+        keys = keys[mask]
+        payload = None if payload is None else payload[mask]
+    hk = _np_hash(keys)
+    M, F = cfg.memory_rows, cfg.fanin
+
+    outputs: list[AggState] = []
+
+    def process(hkeys, pay, level: int, lo: int, hi: int):
+        """Aggregate the hash sub-range [lo, hi); recurse on overflow."""
+        uniq = len(np.unique(hkeys))
+        if uniq <= M:
+            outputs.append(
+                _in_memory_agg(hkeys, None if pay is None else jnp.asarray(pay), backend)
+            )
+            return
+        # overflow: hybrid hashing keeps a resident slice of THIS sub-range
+        resident_frac = (M / uniq) if hybrid else 0.0
+        cut = lo + int(resident_frac * (hi - lo))
+        resident = hkeys < cut
+        if resident.any():
+            outputs.append(
+                _in_memory_agg(
+                    hkeys[resident],
+                    None if pay is None else jnp.asarray(pay[resident]),
+                    backend,
+                )
+            )
+        rest_k, rest_p = hkeys[~resident], None if pay is None else pay[~resident]
+        # hash-partition the overflow into F spill partitions (1 write each)
+        stats.rows_spilled_merge += len(rest_k)
+        stats.merge_levels = max(stats.merge_levels, level + 1)
+        edges = np.linspace(cut, hi, F + 1).astype(np.uint64)
+        part = np.digitize(rest_k.astype(np.uint64), edges[1:-1], right=False)
+        for f in range(F):
+            m = part == f
+            if m.any():
+                stats.merge_steps += 1
+                process(rest_k[m], None if rest_p is None else rest_p[m],
+                        level + 1, int(edges[f]), int(edges[f + 1]))
+
+    process(hk, payload, 0, 0, 1 << 32)
+    # splice partition outputs together (they cover disjoint hash ranges)
+    cat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outputs)
+    cat = sorted_ops.sort_state(cat, backend=backend)  # order by hash
+    # report user keys (un-hash), order remains hash order
+    out = AggState(
+        keys=jnp.where(cat.keys != EMPTY, unhash_u32(cat.keys), jnp.uint32(EMPTY)),
+        count=cat.count,
+        sum=cat.sum,
+        min=cat.min,
+        max=cat.max,
+    )
+    return out, stats
+
+
+def f1_hash_aggregate(
+    keys: np.ndarray,
+    payload: np.ndarray | None = None,
+    cfg: ExecConfig | None = None,
+    *,
+    backend: str = "xla",
+) -> tuple[AggState, SpillStats]:
+    """Pre-paper F1 scheme: hash-table early aggregation, sorted-run spill,
+    non-aggregating merges, dedup only at the final merge (Figs 17/18)."""
+    cfg = cfg or ExecConfig()
+    keys = np.asarray(keys, dtype=np.uint32)
+    mask = keys != EMPTY
+    if not mask.all():
+        keys = keys[mask]
+        if payload is not None:
+            payload = np.asarray(payload, dtype=np.float32)[mask]
+    hk = _np_hash(keys)
+    # The overflowing hash table == our early-aggregation index on hashes:
+    # identical in-memory absorption, identical run counts/sizes (§6.2).
+    runs, table, stats = rg.generate_runs(
+        hk, payload, cfg, policy="early_agg", backend=backend
+    )
+    if table is not None:
+        out = table
+    else:
+        out = merge_mod.final_merge_traditional(
+            runs, cfg, aggregate=False, stats=stats, backend=backend
+        )
+    return (
+        AggState(
+            keys=jnp.where(out.keys != EMPTY, unhash_u32(out.keys), jnp.uint32(EMPTY)),
+            count=out.count,
+            sum=out.sum,
+            min=out.min,
+            max=out.max,
+        ),
+        stats,
+    )

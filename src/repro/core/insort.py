@@ -1,0 +1,130 @@
+"""The paper's full operator: in-sort duplicate removal, grouping, and
+aggregation = early aggregation during run generation (§3) + wide merging
+in the final merge step (§4).
+
+Merge planning follows §4.3 exactly: traditional (aggregating) merge
+levels are worthwhile only while a merge step's total input is smaller
+than the final output O; once intermediate runs reach size ≥ O/F, a single
+wide merge finishes the job.  With initial runs of ~M unique rows that is
+
+    pre_levels = max(0, ceil(log_F(O / M)) - 1)
+
+traditional levels, then one wide merge — total merge depth
+``ceil(log_F(O/M))`` versus the input-driven ``ceil(log_F(I/M))`` of a
+traditional sort.  O is taken from an optimizer-style estimate when given
+(the paper's point is that the *same* algorithm is optimal regardless, so
+a wrong estimate only shifts work between merge styles, never breaks
+correctness — we property-test exactly that).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+from repro.core import merge as merge_mod
+from repro.core import run_generation as rg
+from repro.core.types import AggState, ExecConfig, SpillStats
+
+
+def plan_pre_merge_levels(
+    output_estimate: int, cfg: ExecConfig, num_runs: int
+) -> int:
+    """§4.3 policy: number of traditional merge levels before the wide merge."""
+    from repro.core.cost_model import ceil_log
+
+    M, F = cfg.memory_rows, cfg.fanin
+    if output_estimate <= M:
+        levels = 0
+    else:
+        levels = max(0, ceil_log(output_estimate / M, F) - 1)
+    # never more levels than needed to reach a single run anyway
+    max_useful = ceil_log(num_runs, F) if num_runs > 1 else 0
+    return min(levels, max_useful)
+
+
+def insort_aggregate(
+    keys: np.ndarray,
+    payload: np.ndarray | None = None,
+    cfg: ExecConfig | None = None,
+    *,
+    output_estimate: int | None = None,
+    early_aggregation: bool = True,
+    use_wide_merge: bool = True,
+    run_policy: str = "rs",
+    backend: str = "xla",
+) -> tuple[AggState, SpillStats]:
+    """Group/aggregate an unsorted stream under a memory budget of M rows.
+
+    Returns (sorted aggregate state, exact spill accounting).  Flags switch
+    off the paper's two techniques to recover the baselines of Fig 2:
+
+    * ``early_aggregation=False, use_wide_merge=False`` → traditional
+      external merge sort + in-stream aggregation (Fig 2 top) when
+      combined with ``policy='traditional'`` semantics, or Bitton/DeWitt
+      in-run dedup (Fig 2 bottom).
+    """
+    cfg = cfg or ExecConfig()
+    if early_aggregation and run_policy == "rs":
+        # replacement selection via the ordered index (§3.3): runs up to
+        # 2M, absorption continues at ~M/O throughout — the paper's model.
+        runs, table, stats = rg.generate_runs_rs(keys, payload, cfg, backend=backend)
+    else:
+        policy = "early_agg" if early_aggregation else "inrun_dedup"
+        runs, table, stats = rg.generate_runs(
+            keys, payload, cfg, policy=policy, backend=backend
+        )
+    if table is not None:  # in-memory case (paper Fig 6): nothing spilled
+        return table, stats
+
+    if output_estimate is None:
+        # production default: assume strong reduction (the common case the
+        # paper optimizes); correctness never depends on this.
+        output_estimate = cfg.memory_rows * cfg.fanin
+
+    if not use_wide_merge:
+        out = merge_mod.final_merge_traditional(
+            runs, cfg, aggregate=early_aggregation or policy == "inrun_dedup",
+            stats=stats, backend=backend,
+        )
+        return out, stats
+
+    pre = plan_pre_merge_levels(output_estimate, cfg, len(runs))
+    for _ in range(pre):
+        if len(runs) <= 1:
+            break
+        runs = merge_mod.traditional_merge(
+            runs, cfg, aggregate_during_merge=True, stats=stats, backend=backend,
+            stop_at=max(1, math.ceil(len(runs) / cfg.fanin)),
+        )
+    if len(runs) == 1:
+        # everything already in one aggregated run: stream it out
+        return runs[0].state, stats
+    out = merge_mod.wide_merge(runs, cfg, stats=stats, backend=backend)
+    return out, stats
+
+
+def sort_then_stream_aggregate(
+    keys: np.ndarray,
+    payload: np.ndarray | None = None,
+    cfg: ExecConfig | None = None,
+    *,
+    backend: str = "xla",
+) -> tuple[AggState, SpillStats]:
+    """Baseline of Fig 2 (top): full external merge sort of the raw input,
+    then in-stream aggregation of the sorted stream.  Spill volume grows
+    with the *input* at every merge level — the paper's worst case."""
+    cfg = cfg or ExecConfig()
+    keys = np.asarray(keys, dtype=np.uint32)
+    if keys.shape[0] <= cfg.memory_rows:  # in-memory quicksort case: no spill
+        from repro.core.sorted_ops import sorted_groupby
+
+        return sorted_groupby(jax.numpy.asarray(keys), payload, backend=backend), SpillStats()
+    runs, _, stats = rg.generate_runs(keys, payload, cfg, policy="traditional", backend=backend)
+    if not runs:
+        raise AssertionError("traditional policy always writes runs")
+    out = merge_mod.final_merge_traditional(
+        runs, cfg, aggregate=False, stats=stats, backend=backend
+    )
+    return out, stats

@@ -1,0 +1,276 @@
+"""Merging for external in-sort aggregation: traditional F-way merge and
+the paper's wide merge (§4).
+
+Traditional merging is limited to fan-in F (one input buffer per run);
+aggregation during a merge step caps its output at the operation's final
+output size O.  Wide merging instead keeps an ordered in-memory index over
+the *active key range* and streams pages from **any** number of runs
+through a single shared input buffer, guided by a priority queue over each
+run's next unread page's low key.  Keys below the merge frontier (the
+minimum unread key across all runs) are final and stream out of the left
+edge of the index (Fig 9/10).
+
+Shapes are static: runs live in a stacked "temporary storage" buffer, the
+page loop is a ``lax.while_loop``, and emission scatters into a fixed
+output buffer — the JAX rendering of paged I/O.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sorted_ops
+from repro.core.run_generation import Run
+from repro.core.types import (
+    EMPTY,
+    AggState,
+    ExecConfig,
+    SpillStats,
+    concat_states,
+    empty_state,
+    slice_rows,
+)
+
+
+# ---------------------------------------------------------------------------
+# stacked run storage ("temporary storage")
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunStore:
+    """R runs padded to a common page-aligned capacity C."""
+
+    state: AggState  # fields have leading dims (R, C)
+    lens: jax.Array  # (R,) int32
+
+    @property
+    def num_runs(self) -> int:
+        return self.state.keys.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.state.keys.shape[1]
+
+
+def stack_runs(runs: list[Run], page_rows: int, width: int) -> RunStore:
+    cap = max(1, max(r.length for r in runs))
+    cap = int(math.ceil(cap / page_rows) * page_rows)
+    padded = []
+    for r in runs:
+        s = r.state
+        if s.capacity < cap:
+            s = concat_states(s, empty_state(cap - s.capacity, width))
+        else:
+            s = jax.tree.map(lambda x: x[:cap], s)
+        padded.append(s)
+    state = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *padded)
+    lens = jnp.asarray([r.length for r in runs], dtype=jnp.int32)
+    return RunStore(state=state, lens=lens)
+
+
+def _page_of(store_state: AggState, r, start, page_rows: int) -> AggState:
+    """DMA one page (P rows) of run ``r`` into the shared input buffer."""
+
+    def f(x):
+        sizes = (1, page_rows) + x.shape[2:]
+        starts = (r, start) + (0,) * (x.ndim - 2)
+        return jax.lax.dynamic_slice(x, starts, sizes)[0]
+
+    return jax.tree.map(f, store_state)
+
+
+# ---------------------------------------------------------------------------
+# traditional F-way merge (with/without aggregation during the merge)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("aggregate", "backend"))
+def _merge_group(state: AggState, *, aggregate: bool, backend="xla"):
+    out = (
+        sorted_ops.absorb(state, backend=backend)
+        if aggregate
+        else sorted_ops.sort_state(state, backend=backend)
+    )
+    return out, out.occupancy()
+
+
+def traditional_merge(
+    runs: list[Run],
+    cfg: ExecConfig,
+    *,
+    aggregate_during_merge: bool,
+    stats: SpillStats,
+    backend: str = "xla",
+    stop_at: int = 1,
+) -> list[Run]:
+    """Merge runs F at a time until ``stop_at`` or fewer remain.
+
+    Every merge step's output is written back to temporary storage and
+    counted as spill — except the final step when ``stop_at == 1`` (its
+    output streams to the consumer, Fig 2).
+    """
+    F = cfg.fanin
+    width = runs[0].state.width if runs else 0
+    while len(runs) > stop_at:
+        nxt: list[Run] = []
+        level_groups = [runs[i : i + F] for i in range(0, len(runs), F)]
+        for group in level_groups:
+            if len(group) == 1:  # singleton: carried over, no re-write I/O
+                nxt.append(group[0])
+                continue
+            cat = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *[g.state for g in group]
+            )
+            merged, occ = _merge_group(
+                cat, aggregate=aggregate_during_merge, backend=backend
+            )
+            length = int(occ)
+            nxt.append(Run(state=merged, length=length))
+            stats.merge_steps += 1
+            is_final = len(level_groups) == 1 and len(nxt) <= stop_at
+            if not is_final:
+                stats.rows_spilled_merge += length
+        stats.merge_levels += 1
+        runs = nxt
+    return runs
+
+
+def final_merge_traditional(
+    runs: list[Run], cfg: ExecConfig, *, aggregate: bool, stats: SpillStats,
+    backend: str = "xla",
+) -> AggState:
+    """Reduce to ≤F runs with traditional merging, then stream the final
+    merge (never spilled) — optionally aggregating in-stream (Fig 2 top)."""
+    runs = traditional_merge(
+        runs, cfg, aggregate_during_merge=aggregate, stats=stats, backend=backend,
+        stop_at=cfg.fanin,
+    )
+    cat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *[r.state for r in runs])
+    out, _ = _merge_group(cat, aggregate=True, backend=backend)  # output phase
+    stats.merge_steps += 1
+    stats.merge_levels += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# wide merge (§4)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("page_rows", "index_rows", "out_capacity", "backend"))
+def _wide_merge_jit(
+    store_state: AggState,
+    lens: jax.Array,
+    *,
+    page_rows: int,
+    index_rows: int,
+    out_capacity: int,
+    backend: str = "xla",
+):
+    R, C = store_state.keys.shape
+    P = page_rows
+    W = index_rows + P  # index tile + headroom for one incoming page
+    width = store_state.sum.shape[-1]
+    n_pages = (lens + P - 1) // P
+    arange_R = jnp.arange(R)
+
+    def next_low_keys(cursors):
+        # priority queue over each run's next unread page's low key
+        pos = jnp.clip(cursors * P, 0, C - 1)
+        k = store_state.keys[arange_R, pos]
+        return jnp.where(cursors < n_pages, k, jnp.uint32(EMPTY))
+
+    out0 = empty_state(out_capacity, width)
+
+    def cond(carry):
+        cursors, *_ = carry
+        return jnp.any(cursors < n_pages)
+
+    def body(carry):
+        cursors, index, out, out_cur, pages_read, max_occ, overflow = carry
+        low = next_low_keys(cursors)
+        rstar = jnp.argmin(low)  # EMPTY == uint32 max ⇒ exhausted runs lose
+        start = cursors[rstar] * P
+        page = _page_of(store_state, rstar, start, P)
+        # absorb the page into the ordered index (batched insert, §3.4)
+        merged = sorted_ops.merge_absorb(index, page, backend=backend)  # cap W + P
+        cursors = cursors.at[rstar].add(1)
+        # merge frontier: the least key any run can still deliver
+        frontier = jnp.min(next_low_keys(cursors))
+        keys = merged.keys
+        occ = merged.occupancy()
+        final_mask = keys < frontier  # EMPTY never < frontier unless frontier==EMPTY
+        e = jnp.sum(final_mask.astype(jnp.int32))
+        # emit the final prefix out of the left edge of the index
+        idx = jnp.where(jnp.arange(W + P) < e, out_cur + jnp.arange(W + P), out_capacity)
+
+        def scatter(dst, src):
+            return dst.at[idx].set(src, mode="drop")
+
+        out = jax.tree.map(scatter, out, merged)
+        out_cur = out_cur + e
+        # shift the index left by e (drop emitted rows), trim back to W
+        src = jnp.minimum(jnp.arange(W) + e, W + P - 1)
+        shifted = jax.tree.map(lambda x: jnp.take(x, src, axis=0), merged)
+        live = jnp.arange(W) < (occ - e)
+        new_keys = jnp.where(live, shifted.keys, jnp.uint32(EMPTY))
+        index = AggState(new_keys, shifted.count, shifted.sum, shifted.min, shifted.max)
+        resident = occ - e
+        max_occ = jnp.maximum(max_occ, resident)
+        overflow = overflow | (resident > index_rows)
+        return (cursors, index, out, out_cur, pages_read + 1, max_occ, overflow)
+
+    carry = (
+        jnp.zeros((R,), jnp.int32),
+        empty_state(W, width),
+        out0,
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.int32(0),
+        jnp.bool_(False),
+    )
+    cursors, index, out, out_cur, pages_read, max_occ, overflow = jax.lax.while_loop(
+        cond, body, carry
+    )
+    return out, out_cur, pages_read, max_occ, overflow
+
+
+def wide_merge(
+    runs: list[Run],
+    cfg: ExecConfig,
+    *,
+    stats: SpillStats,
+    out_capacity: int | None = None,
+    index_rows: int | None = None,
+    backend: str = "xla",
+) -> AggState:
+    """Final merge step with unbounded fan-in (§4). Never spills.
+
+    ``index_rows`` defaults to the memory allocation M; the paper shows the
+    wide merge often needs well under M (Example 4: ~40%).
+    """
+    width = runs[0].state.width
+    store = stack_runs(runs, cfg.page_rows, width)
+    if out_capacity is None:
+        out_capacity = int(sum(r.length for r in runs))
+    out, out_cur, pages_read, max_occ, overflow = _wide_merge_jit(
+        store.state,
+        store.lens,
+        page_rows=cfg.page_rows,
+        index_rows=index_rows or cfg.memory_rows,
+        out_capacity=out_capacity,
+        backend=backend,
+    )
+    stats.merge_steps += 1
+    stats.merge_levels += 1
+    stats.pages_read += int(pages_read)
+    stats.max_index_occupancy = max(stats.max_index_occupancy, int(max_occ))
+    stats.index_overflowed = bool(overflow) or stats.index_overflowed
+    del out_cur
+    return out

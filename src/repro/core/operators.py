@@ -1,0 +1,230 @@
+"""User-facing relational operators built on the single in-sort engine.
+
+The paper's thesis: one sort-based algorithm can serve as *the only*
+aggregation algorithm for unsorted inputs.  Accordingly ``group_by`` with
+``algorithm="auto"`` always picks in-sort aggregation; the hash and
+sort-then-stream baselines exist for the paper's comparisons.
+
+Interesting-orderings payoffs (§2.2, §6.3, §6.4) are implemented as
+operators that reuse a single sort:
+
+* ``group_by_order_by``      — grouping whose sorted output satisfies an
+                               equal ORDER BY for free (Fig 19);
+* ``count_and_count_distinct`` — one sort on (g, a) serves both DISTINCT
+                               and the subsequent grouping (Fig 20);
+* ``rollup``                 — all rollup levels from one sort (§2.2);
+* ``intersect_distinct``     — sorted plans spill each row once, not twice
+                               (Figs 21/22).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hash_agg as hash_mod
+from repro.core import insort as insort_mod
+from repro.core import sorted_ops
+from repro.core.types import EMPTY, AggState, ExecConfig, SpillStats
+
+
+# ---------------------------------------------------------------------------
+# key packing (multi-column grouping keys → one uint32)
+# ---------------------------------------------------------------------------
+
+
+def pack_keys(hi, lo, lo_bits: int):
+    """Pack two non-negative integer columns into one uint32 sort key with
+    ``hi`` major — the composite-key trick behind rollup/count-distinct."""
+    hi = jnp.asarray(hi, dtype=jnp.uint32)
+    lo = jnp.asarray(lo, dtype=jnp.uint32)
+    return (hi << lo_bits) | lo
+
+
+def unpack_keys(keys, lo_bits: int):
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    return keys >> lo_bits, keys & ((jnp.uint32(1) << lo_bits) - jnp.uint32(1))
+
+
+# ---------------------------------------------------------------------------
+# group by / distinct
+# ---------------------------------------------------------------------------
+
+
+def group_by(
+    keys,
+    payload=None,
+    cfg: ExecConfig | None = None,
+    *,
+    algorithm: str = "auto",
+    output_estimate: int | None = None,
+    backend: str = "xla",
+) -> tuple[AggState, SpillStats]:
+    """Duplicate removal / grouping / aggregation of an unsorted input.
+
+    algorithm: "auto" (≡ "insort" — the paper's systems-only choice),
+    "insort", "hash", "sort_then_stream", or "inmemory" (no budget).
+    """
+    cfg = cfg or ExecConfig()
+    if algorithm in ("auto", "insort"):
+        return insort_mod.insort_aggregate(
+            keys, payload, cfg, output_estimate=output_estimate, backend=backend
+        )
+    if algorithm == "hash":
+        return hash_mod.hash_aggregate(
+            keys, payload, cfg, output_estimate=output_estimate, backend=backend
+        )
+    if algorithm == "f1_hash":
+        return hash_mod.f1_hash_aggregate(keys, payload, cfg, backend=backend)
+    if algorithm == "sort_then_stream":
+        return insort_mod.sort_then_stream_aggregate(keys, payload, cfg, backend=backend)
+    if algorithm == "inmemory":
+        st = sorted_ops.sorted_groupby(
+            jnp.asarray(np.asarray(keys, dtype=np.uint32)),
+            None if payload is None else jnp.asarray(payload),
+            backend=backend,
+        )
+        return st, SpillStats()
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def distinct(keys, cfg: ExecConfig | None = None, **kw) -> tuple[AggState, SpillStats]:
+    """SELECT DISTINCT — grouping with no payload."""
+    return group_by(keys, None, cfg, **kw)
+
+
+def group_by_order_by(keys, payload=None, cfg=None, *, algorithm="auto", **kw):
+    """GROUP BY g ORDER BY g (Fig 19).  In-sort output is already sorted;
+    hash output needs an extra full sort of the result (charged here)."""
+    state, stats = group_by(keys, payload, cfg, algorithm=algorithm, **kw)
+    extra_sort_rows = 0
+    if algorithm in ("hash", "f1_hash"):
+        state = sorted_ops.sort_state(state)  # hash order → key order
+        extra_sort_rows = int(state.occupancy())
+    return state, stats, extra_sort_rows
+
+
+def count_and_count_distinct(g, a, lo_bits: int, cfg=None, *, algorithm="auto", **kw):
+    """``select g, count(a), count(distinct a) … group by g`` (Fig 20).
+
+    Sort-based: ONE sort on the composite key (g, a); duplicate removal on
+    (g, a) and the subsequent per-g grouping use the same interesting
+    ordering.  Hash-based needs two hash tables (both may spill) — modeled
+    by running two hash aggregations and summing their spills.
+    """
+    g = jnp.asarray(g, dtype=jnp.uint32)
+    a = jnp.asarray(a, dtype=jnp.uint32)
+    packed = pack_keys(g, a, lo_bits)
+    if algorithm in ("auto", "insort"):
+        # one memory-intensive operation (the sort); both results fall out.
+        dedup, stats = group_by(np.asarray(packed), None, cfg, algorithm="insort", **kw)
+        gg, _ = unpack_keys(dedup.keys, lo_bits)
+        gg = jnp.where(dedup.keys != EMPTY, gg, jnp.uint32(EMPTY))
+        # per-g: count(a) = sum of per-(g,a) counts; count(distinct a) = rows
+        per_g = sorted_ops.sorted_groupby(
+            gg,
+            jnp.stack(
+                [dedup.count.astype(jnp.float32), dedup.valid().astype(jnp.float32)],
+                axis=1,
+            ),
+        )  # in-stream over sorted keys in production; fused here
+        return per_g, stats
+    # hash plan: two independent hash aggregations
+    dedup, s1 = group_by(np.asarray(packed), None, cfg, algorithm="hash", **kw)
+    gg, _ = unpack_keys(dedup.keys, lo_bits)
+    gg = jnp.where(dedup.keys != EMPTY, gg, jnp.uint32(EMPTY))
+    per_g, s2 = group_by(
+        np.asarray(jnp.where(dedup.keys != EMPTY, gg, jnp.uint32(EMPTY))),
+        np.asarray(
+            jnp.stack(
+                [dedup.count.astype(jnp.float32), dedup.valid().astype(jnp.float32)],
+                axis=1,
+            )
+        ),
+        cfg,
+        algorithm="hash",
+        **kw,
+    )
+    s1.rows_spilled_merge += s2.total_spill_rows
+    return per_g, s1
+
+
+def rollup(day, month, year, payload=None, cfg=None, **kw):
+    """``group by rollup(day, month, year)`` from ONE sort (§2.2): sort on
+    (year, month, day); every coarser level is an in-stream pass over the
+    finer level's (already sorted) output.  Hash plans need one hash table
+    per level."""
+    day = jnp.asarray(day, jnp.uint32)
+    month = jnp.asarray(month, jnp.uint32)
+    year = jnp.asarray(year, jnp.uint32)
+    key = (year << 9) | (month << 5) | day  # 4 bits month? generous: 9/5 bits
+    fine, stats = group_by(np.asarray(key), payload, cfg, algorithm="insort", **kw)
+    vk = fine.valid()
+    levels = {"day": fine}
+    ym = jnp.where(vk, fine.keys >> 5, jnp.uint32(EMPTY))
+    by_month = sorted_ops.sorted_groupby(ym, fine.sum)
+    levels["month"] = by_month
+    yy = jnp.where(by_month.valid(), by_month.keys >> 4, jnp.uint32(EMPTY))
+    levels["year"] = sorted_ops.sorted_groupby(yy, by_month.sum)
+    tot_key = jnp.where(levels["year"].valid(), jnp.uint32(0), jnp.uint32(EMPTY))
+    levels["all"] = sorted_ops.sorted_groupby(tot_key, levels["year"].sum)
+    return levels, stats
+
+
+def intersect_distinct(a, b, cfg=None, *, algorithm="auto", **kw):
+    """``select k from T1 intersect select k from T2`` (Figs 21/22).
+
+    Sort-based plan: in-sort DISTINCT on each input (each row spills at
+    most once), then a merge join of two sorted, duplicate-free streams —
+    no further spill.  Hash-based plan: hash DISTINCT on each input plus a
+    hash join that spills both (rows spill twice).
+    """
+    alg = "insort" if algorithm in ("auto", "insort") else "hash"
+    da, sa = distinct(a, cfg, algorithm=alg, **kw)
+    db, sb = distinct(b, cfg, algorithm=alg, **kw)
+    if alg == "hash":
+        da = sorted_ops.sort_state(da)
+        db = sorted_ops.sort_state(db)
+        # hash join spills both inputs again when larger than memory
+        cfgM = (cfg or ExecConfig()).memory_rows
+        extra = 0
+        na, nb = int(da.occupancy()), int(db.occupancy())
+        if na + nb > cfgM:
+            extra = na + nb
+        sa.rows_spilled_merge += sb.total_spill_rows + extra
+    else:
+        sa.rows_spilled_merge += sb.total_spill_rows
+    # merge join of sorted duplicate-free key streams
+    ka, kb = da.keys, db.keys
+    hit = jnp.isin(ka, kb[kb != EMPTY]) & (ka != EMPTY)
+    out = jnp.where(hit, ka, jnp.uint32(EMPTY))
+    out = jnp.sort(out)
+    return out, sa
+
+
+def validate_against_oracle(state: AggState, keys, payload=None):
+    """NumPy oracle check used across the test suite."""
+    keys = np.asarray(keys, dtype=np.uint32)
+    mask = keys != EMPTY
+    keys = keys[mask]
+    uk, inv = np.unique(keys, return_inverse=True)
+    got_k = np.asarray(state.keys)
+    got_valid = got_k != EMPTY
+    got = got_k[got_valid]
+    order = np.argsort(got, kind="stable")
+    assert np.array_equal(np.sort(got), uk), "key sets differ"
+    cnt = np.zeros(len(uk), np.int64)
+    np.add.at(cnt, inv, 1)
+    got_cnt = np.asarray(state.count)[got_valid][order]
+    assert np.array_equal(got_cnt, cnt), "counts differ"
+    if payload is not None:
+        payload = np.asarray(payload, dtype=np.float32)[mask]
+        if payload.ndim == 1:
+            payload = payload[:, None]
+        sums = np.zeros((len(uk), payload.shape[1]), np.float64)
+        np.add.at(sums, inv, payload.astype(np.float64))
+        got_sum = np.asarray(state.sum, dtype=np.float64)[got_valid][order]
+        np.testing.assert_allclose(got_sum, sums, rtol=2e-4, atol=2e-3)
+    return True

@@ -1,0 +1,142 @@
+"""Vectorized ordered-index primitives (the TPU adaptation of the paper's
+in-memory b-tree).
+
+The paper replaces priority queues with an ordered in-memory index whose
+batched usage pattern it spells out in §3.4: *sort the incoming batch, then
+turn the per-row search into a merge*.  On a vector machine that whole
+recipe collapses into three primitives over fixed-capacity tiles:
+
+* ``sort_state``          — key-sort a tile (EMPTY keys sink to the end);
+* ``segmented_combine``   — absorb equal keys by combining aggregate states
+                            (the b-tree "absorb" of §3);
+* ``merge_absorb``        — batched insert = concat + sort + combine.
+
+Everything is fixed-shape and jit-friendly.  ``backend='pallas'`` routes the
+sort / segmented reduction through the Pallas TPU kernels in
+:mod:`repro.kernels`; the default XLA path is the oracle-equivalent
+implementation used on CPU and in dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import EMPTY, AggState, concat_states, rows_to_state, take
+
+_INF = jnp.float32(jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# sorting
+# ---------------------------------------------------------------------------
+
+
+def sort_state(state: AggState, *, backend: str = "xla") -> AggState:
+    """Key-sort all rows of a state; EMPTY (=uint32 max) rows sink to the end."""
+    if backend == "pallas":
+        from repro.kernels import ops as _ops  # lazy; optional path
+
+        perm = _ops.argsort_u32(state.keys)
+    else:
+        perm = jnp.argsort(state.keys)
+    return take(state, perm)
+
+
+# ---------------------------------------------------------------------------
+# segmented combine (absorb duplicates)
+# ---------------------------------------------------------------------------
+
+
+def _segment_ids(sorted_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(head flags, segment index) for a key-sorted vector; EMPTY rows get
+    an out-of-range segment so scatters drop them."""
+    n = sorted_keys.shape[0]
+    valid = sorted_keys != EMPTY
+    neq = jnp.concatenate(
+        [jnp.ones((1,), dtype=bool), sorted_keys[1:] != sorted_keys[:-1]]
+    )
+    heads = neq & valid
+    seg = jnp.cumsum(heads.astype(jnp.int32)) - 1
+    seg = jnp.where(valid, seg, n)  # out-of-range ⇒ dropped by scatters
+    return heads, seg
+
+
+def segmented_combine(state: AggState, *, backend: str = "xla") -> AggState:
+    """Combine adjacent equal-key rows of a key-sorted state.
+
+    Output keeps the input capacity: unique groups are compacted to the
+    front (still sorted), the tail is EMPTY.  This is the vectorized
+    equivalent of inserting a sorted batch into the paper's b-tree and
+    letting existing keys absorb the new rows.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as _ops
+
+        return _ops.segmented_combine(state)
+    n = state.capacity
+    heads, seg = _segment_ids(state.keys)
+    out_keys = jnp.full((n,), EMPTY, dtype=jnp.uint32).at[seg].set(
+        state.keys, mode="drop"
+    )
+    count = jnp.zeros((n,), jnp.int32).at[seg].add(state.count, mode="drop")
+    ssum = jnp.zeros_like(state.sum).at[seg].add(state.sum, mode="drop")
+    smin = jnp.full_like(state.min, _INF).at[seg].min(state.min, mode="drop")
+    smax = jnp.full_like(state.max, -_INF).at[seg].max(state.max, mode="drop")
+    return AggState(keys=out_keys, count=count, sum=ssum, min=smin, max=smax)
+
+
+def absorb(state: AggState, *, backend: str = "xla") -> AggState:
+    """sort + combine: canonicalize any state to sorted/compacted form."""
+    return segmented_combine(sort_state(state, backend=backend), backend=backend)
+
+
+def merge_absorb(table: AggState, incoming: AggState, *, backend: str = "xla") -> AggState:
+    """Batched insert of ``incoming`` into the ordered index ``table``.
+
+    Returns a state of capacity ``len(table) + len(incoming)`` — sorted,
+    duplicate-free, EMPTY-padded.  The caller decides whether the result
+    still fits "memory" (paper: whether the b-tree must spill).
+    """
+    return absorb(concat_states(table, incoming), backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# fused in-memory fast path (what the LM framework calls)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def sorted_groupby(keys: jax.Array, payload: jax.Array | None = None, *, backend: str = "xla") -> AggState:
+    """One-shot device group-by: the `O ≤ M` case of the paper (Fig 6).
+
+    Sorted output comes for free — the "interesting orderings" property the
+    paper leans on for group-by + order-by fusion.
+    """
+    return absorb(rows_to_state(keys, payload), backend=backend)
+
+
+def unique_count(state: AggState) -> jax.Array:
+    return state.occupancy()
+
+
+def finalize(state: AggState, aggs: tuple[str, ...] = ("count", "sum", "min", "max", "avg")):
+    """Turn accumulator state into user-facing aggregate columns."""
+    out = {"key": state.keys}
+    valid = state.valid()
+    for a in aggs:
+        if a == "count":
+            out["count"] = state.count
+        elif a == "sum":
+            out["sum"] = state.sum
+        elif a == "min":
+            out["min"] = jnp.where(valid[:, None], state.min, 0.0)
+        elif a == "max":
+            out["max"] = jnp.where(valid[:, None], state.max, 0.0)
+        elif a == "avg":
+            c = jnp.maximum(state.count, 1).astype(jnp.float32)[:, None]
+            out["avg"] = state.sum / c
+        else:
+            raise ValueError(f"unknown aggregate {a!r}")
+    return out

@@ -1,0 +1,155 @@
+"""Core row/aggregate-state types shared by every grouping algorithm.
+
+The paper's operators consume streams of (key, payload) rows and produce
+(key, aggregate) rows.  All algorithms in :mod:`repro.core` share one
+fixed-shape representation so that sort-based, hash-based, and in-stream
+aggregation are interchangeable and bit-comparable:
+
+* keys are ``uint32``; the sentinel ``EMPTY = 0xFFFF_FFFF`` marks unused
+  slots and conveniently sorts to the end, which is how fixed-capacity
+  "memory" tiles model the paper's variable-occupancy b-tree.
+* the aggregate state is a struct-of-arrays ``AggState`` carrying
+  count / sum / min / max over a ``V``-wide float payload (``V = 0`` for
+  pure duplicate removal).  ``avg`` etc. are finalizers over this state,
+  matching the paper's note (§3.3) that the in-memory row format differs
+  from both input and output formats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EMPTY = np.uint32(0xFFFFFFFF)
+# Largest key a user may supply (EMPTY is reserved).
+MAX_KEY = np.uint32(0xFFFFFFFE)
+
+_F32_INF = np.float32(np.inf)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AggState:
+    """Struct-of-arrays aggregate accumulator.
+
+    ``keys``   (N,)    uint32, EMPTY marks invalid rows.
+    ``count``  (N,)    int64-safe int32 group cardinalities.
+    ``sum``    (N, V)  float32 running sums.
+    ``min``    (N, V)  float32 running minima (+inf for invalid).
+    ``max``    (N, V)  float32 running maxima (-inf for invalid).
+    """
+
+    keys: jax.Array
+    count: jax.Array
+    sum: jax.Array
+    min: jax.Array
+    max: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.sum.shape[1]
+
+    def valid(self) -> jax.Array:
+        return self.keys != EMPTY
+
+    def occupancy(self) -> jax.Array:
+        return jnp.sum(self.valid().astype(jnp.int32))
+
+
+def empty_state(capacity: int, width: int) -> AggState:
+    """A fresh, all-invalid accumulator of fixed capacity."""
+    return AggState(
+        keys=jnp.full((capacity,), EMPTY, dtype=jnp.uint32),
+        count=jnp.zeros((capacity,), dtype=jnp.int32),
+        sum=jnp.zeros((capacity, width), dtype=jnp.float32),
+        min=jnp.full((capacity, width), _F32_INF, dtype=jnp.float32),
+        max=jnp.full((capacity, width), -_F32_INF, dtype=jnp.float32),
+    )
+
+
+def rows_to_state(keys: jax.Array, payload: jax.Array | None) -> AggState:
+    """Lift raw input rows into aggregate states (count=1, sum=min=max=v)."""
+    keys = keys.astype(jnp.uint32)
+    n = keys.shape[0]
+    if payload is None:
+        payload = jnp.zeros((n, 0), dtype=jnp.float32)
+    if payload.ndim == 1:
+        payload = payload[:, None]
+    payload = payload.astype(jnp.float32)
+    valid = keys != EMPTY
+    vcol = valid[:, None]
+    return AggState(
+        keys=keys,
+        count=valid.astype(jnp.int32),
+        sum=jnp.where(vcol, payload, 0.0),
+        min=jnp.where(vcol, payload, _F32_INF),
+        max=jnp.where(vcol, payload, -_F32_INF),
+    )
+
+
+def concat_states(a: AggState, b: AggState) -> AggState:
+    return jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=0), a, b)
+
+
+def take(state: AggState, idx: jax.Array) -> AggState:
+    """Row-gather a state (used to apply sort permutations)."""
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), state)
+
+
+def slice_rows(state: AggState, start, size: int) -> AggState:
+    def f(x):
+        return jax.lax.dynamic_slice_in_dim(x, start, size, axis=0)
+
+    return jax.tree.map(f, state)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """External-algorithm knobs, mirroring the paper's experiment parameters.
+
+    memory_rows  M — the fixed "memory allocation" in rows.
+    page_rows    P — unit of temporary-storage I/O in rows.
+    fanin        F — traditional merge fan-in / hash partitioning fan-out.
+    batch_rows     — input consumption granularity (paper §5 sorts small
+                     input batches before probing the index).
+    """
+
+    memory_rows: int = 1 << 12
+    page_rows: int = 1 << 8
+    fanin: int = 8
+    batch_rows: int = 1 << 10
+
+    def __post_init__(self):
+        assert self.page_rows <= self.memory_rows
+        assert self.batch_rows <= self.memory_rows
+        assert self.fanin >= 2
+
+
+@dataclasses.dataclass
+class SpillStats:
+    """Exact temporary-storage accounting (rows, the paper's unit)."""
+
+    rows_spilled_run_generation: int = 0
+    rows_spilled_merge: int = 0
+    runs_generated: int = 0
+    merge_steps: int = 0
+    merge_levels: int = 0
+    pages_read: int = 0
+    index_overflowed: bool = False
+    max_index_occupancy: int = 0
+
+    @property
+    def total_spill_rows(self) -> int:
+        return self.rows_spilled_run_generation + self.rows_spilled_merge
+
+    def as_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["total_spill_rows"] = self.total_spill_rows
+        return d

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticCorpus, DataLoader, dedup_examples, pack_by_length

@@ -1,0 +1,165 @@
+"""Logical-axis → mesh-axis sharding rules (DP/FSDP + TP + EP + SP).
+
+Parameters carry logical axis names from their initializers ("embed",
+"heads", "vocab", "expert", …).  Rules map those to mesh axes; a conflict
+pass guarantees a mesh axis appears at most once per spec (first logical
+axis wins, later ones fall back to replication).
+
+Default recipe (single pod (data=16, model=16), multi-pod adds "pod"):
+  vocab / heads / kv_heads / mlp / expert / inner → "model"   (TP/EP)
+  embed                                           → "data"    (FSDP/ZeRO-3)
+  layers / lora / scalars                         → replicated
+Batch dims of activations/inputs shard over ("pod","data").
+
+GQA archs whose head counts don't divide 16 (qwen2*: 12 heads) shard the
+flattened head*dh matrix dims evenly; activation head sharding is uneven
+and GSPMD pads — documented waste, see EXPERIMENTS §Dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DEFAULT_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "inner": "model",
+    "embed": "data",  # FSDP / ZeRO-3
+    "lora": None,
+    "layers": None,
+}
+
+
+def rules_for_mesh(mesh) -> dict[str, Any]:
+    """Multi-pod: FSDP spans both data-parallel axes (pod, data) so the
+    671B-class models' parameter shards halve when pods double."""
+    rules = dict(DEFAULT_RULES)
+    if "pod" in mesh.axis_names:
+        rules["embed"] = ("pod", "data")
+    return rules
+
+
+def spec_from_axes(axes, rules=None) -> P:
+    """Tuple of logical names (possibly nested dict leaf) → PartitionSpec
+    with duplicate-mesh-axis conflict resolution.  A rule value may be a
+    tuple of mesh axes (sharded over their product)."""
+    rules = rules or DEFAULT_RULES
+    used: set[str] = set()
+    out = []
+    for ax in axes:
+        mesh_ax = rules.get(ax) if ax is not None else None
+        if isinstance(mesh_ax, tuple):
+            free = tuple(a for a in mesh_ax if a not in used)
+            if not free:
+                out.append(None)
+                continue
+            out.append(free if len(free) > 1 else free[0])
+            used.update(free)
+        elif mesh_ax is None or mesh_ax in used:
+            out.append(None)
+        else:
+            out.append(mesh_ax)
+            used.add(mesh_ax)
+    return P(*out)
+
+
+def tree_specs(spec_tree, rules=None):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: spec_from_axes(axes, rules),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def shardings_for(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec(mesh: Mesh, ndim: int, *, batch_axis: int = 0) -> P:
+    """Inputs: shard the batch dim over every data-parallel mesh axis."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    parts = [None] * ndim
+    parts[batch_axis] = dp if len(dp) > 1 else dp[0]
+    return P(*parts)
+
+
+def cache_specs(cfg, mesh: Mesh):
+    """Decode-cache shardings: batch over data axes; kv heads over model
+    when they divide the TP degree, otherwise the cache shards its
+    SEQUENCE dim over model (flash-decoding style: per-shard partial
+    attention + small softmax-stat collectives; the in-place cache update
+    lowers to a masked per-shard dynamic-update-slice)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else dp[0]
+    tp = mesh.shape["model"]
+
+    def attn():
+        if cfg.mla is not None:
+            return {
+                "latent": P(None, dp, None, "model"),
+                "k_rope": P(None, dp, "model", None),
+                "index": P(None),
+            }
+        if (cfg.n_kv_heads * cfg.kv_dup) % tp == 0:
+            kv = P(None, dp, None, "model", None)
+        else:
+            kv = P(None, dp, "model", None, None)  # sequence-sharded cache
+        return {"k": kv, "v": kv, "index": P(None)}
+
+    def mamba():
+        return {
+            "conv": P(None, dp, None, "model"),
+            "ssm": P(None, dp, "model", None, None),
+        }
+
+    if cfg.family == "ssm":
+        return mamba()
+    if cfg.family == "hybrid":
+        return (mamba(), attn())
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        return (attn(), attn())
+    return attn()
+
+
+def opt_state_specs(param_specs, opt_name: str):
+    """Optimizer state inherits parameter shardings leaf-by-leaf.
+
+    adamw: m/v same shape+sharding as the param.
+    adafactor: factored rows/cols — drop the last (rows) / second-to-last
+    (cols) axis of the param spec.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def adam_like(s):
+        return s
+
+    def rows(s):
+        parts = list(s)
+        return P(*parts[:-1]) if len(parts) >= 2 else s
+
+    def cols(s):
+        parts = list(s)
+        if len(parts) >= 2:
+            return P(*(parts[:-2] + parts[-1:]))
+        return P(None)
+
+    step_spec = P()
+    if opt_name == "adamw":
+        m = jax.tree.map(adam_like, param_specs, is_leaf=lambda x: isinstance(x, P))
+        v = jax.tree.map(adam_like, param_specs, is_leaf=lambda x: isinstance(x, P))
+    else:
+        m = jax.tree.map(rows, param_specs, is_leaf=lambda x: isinstance(x, P))
+        v = jax.tree.map(cols, param_specs, is_leaf=lambda x: isinstance(x, P))
+    return step_spec, m, v

@@ -1,0 +1,82 @@
+"""Expert-blocked (grouped) matmul — the MoE compute hot spot fed by
+sort-based dispatch.
+
+After tokens are sorted by expert id (the paper's grouping, applied to
+routing) and padded to a per-expert capacity C, the activations form a
+(E·C, D) matrix whose row-blocks each belong to exactly one expert.  The
+kernel computes  out[e·C+i, :] = x[e·C+i, :] @ w[e, :, :]  with MXU-aligned
+(bm × bk)·(bk × bn) tiles and a VMEM accumulator, walking k as the
+innermost grid dimension.  Aligning the capacity C to the row-block bm
+means a block never straddles experts — the index map picks w's expert
+block directly from the row-block id, no scatter/gather anywhere.
+
+Cost: 2·E·C·D·F flops; arithmetic intensity rises with bm/bn like an
+ordinary matmul, so MXU utilization matches dense matmul on the padded
+shape — the price of padding is the capacity factor, which the sorted
+dispatch keeps near 1 by construction (tokens are contiguous per expert).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("capacity", "block_m", "block_n", "block_k", "interpret"),
+)
+def grouped_matmul(
+    x: jax.Array,  # (E*C, D) rows sorted/padded by expert
+    w: jax.Array,  # (E, D, F)
+    *,
+    capacity: int,  # C — rows per expert, multiple of block_m
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    ec, d = x.shape
+    e, dw, f = w.shape
+    assert dw == d and ec == e * capacity
+    assert capacity % block_m == 0, "capacity must align to the row block"
+    assert d % block_k == 0 and f % block_n == 0
+    nk = d // block_k
+    blocks_per_expert = capacity // block_m
+
+    grid = (ec // block_m, f // block_n, nk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        out_shape=jax.ShapeDtypeStruct((ec, f), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+            pl.BlockSpec(
+                (1, block_k, block_n),
+                lambda m, n, k, bpe=blocks_per_expert: (m // bpe, k, n),
+            ),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+        scratch_shapes=[  # fp32 accumulator tile in VMEM
+            pltpu.VMEM((block_m, block_n), jnp.float32)
+        ],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,151 @@
+"""jit'd wrappers exposing the Pallas kernels with framework-level shapes.
+
+These handle the impedance between user shapes and kernel tiles: padding
+to powers of two / MXU multiples, EMPTY-key padding, AggState struct ↔
+(T,N)/(T,V,N) tile layout, and the XLA-side compaction scatter that
+follows the in-kernel segmented scans.  ``interpret=True`` everywhere on
+CPU (Mosaic is TPU-only); the flag flips off on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import EMPTY, AggState
+from repro.kernels import bitonic_sort as _bs
+from repro.kernels import grouped_matmul as _gm
+from repro.kernels import merge_aggregate as _ma
+from repro.kernels import segmented_reduce as _sr
+
+INTERPRET = True  # CPU container; set False on TPU
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(1, (n - 1).bit_length())
+
+
+def sort_u32(keys: jax.Array) -> jax.Array:
+    """Sort a 1-D uint32 vector (EMPTY-padded to a power of two)."""
+    n = keys.shape[0]
+    m = _next_pow2(n)
+    padded = jnp.full((1, m), EMPTY, jnp.uint32).at[0, :n].set(keys)
+    return _bs.bitonic_sort(padded, interpret=INTERPRET)[0, :n]
+
+
+def argsort_u32(keys: jax.Array) -> jax.Array:
+    """Key-argsort via the kv kernel with the row index as payload."""
+    n = keys.shape[0]
+    m = _next_pow2(n)
+    padded = jnp.full((1, m), EMPTY, jnp.uint32).at[0, :n].set(keys)
+    pay = jnp.arange(m, dtype=jnp.uint32)[None, :]
+    _, perm = _bs.bitonic_sort_kv(padded, pay, interpret=INTERPRET)
+    perm = perm[0]
+    # padded slots carry EMPTY keys which sort to the tail; any index ≥ n
+    # in the first n outputs would be a bug (covered by tests)
+    return jnp.minimum(perm[:n], n - 1).astype(jnp.int32)
+
+
+def _state_to_tiles(state: AggState, n: int):
+    """AggState (N rows) → (1,N) / (1,V,N) tiles, V≥1 (dummy col if V=0)."""
+    keys = state.keys[None]
+    cnt = state.count[None]
+    v = max(1, state.width)
+    if state.width == 0:
+        z = jnp.zeros((1, 1, n), jnp.float32)
+        return keys, cnt, z, z, z
+    ssum = jnp.moveaxis(state.sum, 0, -1)[None]
+    smin = jnp.moveaxis(state.min, 0, -1)[None]
+    smax = jnp.moveaxis(state.max, 0, -1)[None]
+    return keys, cnt, ssum, smin, smax
+
+
+def _compact(keys, cnt, ssum, smin, smax, tails, width: int) -> AggState:
+    """Scatter segment tails to the front (XLA side; memory-bound)."""
+    n = keys.shape[-1]
+    keys, cnt, tails = keys[0], cnt[0], tails[0]
+    ssum, smin, smax = ssum[0], smin[0], smax[0]
+    pos = jnp.cumsum(tails.astype(jnp.int32)) - 1
+    idx = jnp.where(tails, pos, n)  # out-of-range → dropped
+    out_keys = jnp.full((n,), EMPTY, jnp.uint32).at[idx].set(keys, mode="drop")
+    out_cnt = jnp.zeros((n,), cnt.dtype).at[idx].set(cnt, mode="drop")
+
+    def sc(col, fill):
+        return jnp.full((n,), fill, col.dtype).at[idx].set(col, mode="drop")
+
+    if width == 0:
+        z = jnp.zeros((n, 0), jnp.float32)
+        return AggState(out_keys, out_cnt, z, z, z)
+    out_sum = jnp.stack([sc(ssum[v], 0.0) for v in range(width)], axis=-1)
+    out_min = jnp.stack([sc(smin[v], jnp.inf) for v in range(width)], axis=-1)
+    out_max = jnp.stack([sc(smax[v], -jnp.inf) for v in range(width)], axis=-1)
+    return AggState(out_keys, out_cnt, out_sum, out_min, out_max)
+
+
+def segmented_combine(state: AggState) -> AggState:
+    """Pallas-backed equivalent of sorted_ops.segmented_combine (input must
+    be key-sorted; output compacted to the front, EMPTY-padded)."""
+    n0 = state.capacity
+    n = _next_pow2(n0)
+    if n != n0:
+        pad = n - n0
+        state = jax.tree.map(
+            lambda x: jnp.concatenate(
+                [x, jnp.full((pad,) + x.shape[1:], _pad_val(x), x.dtype)], 0
+            ),
+            state,
+        )
+    keys, cnt, ssum, smin, smax = _state_to_tiles(state, n)
+    c2, s2, mn2, mx2, tails = _sr.segmented_scan_tiles(
+        keys, cnt, ssum, smin, smax, interpret=INTERPRET
+    )
+    out = _compact(keys, c2, s2, mn2, mx2, tails, state.width)
+    return jax.tree.map(lambda x: x[:n0], out)
+
+
+def merge_absorb_sorted(a: AggState, b: AggState) -> AggState:
+    """Fused wide-merge inner step: both inputs key-sorted; returns the
+    combined state of capacity |a|+|b| (sorted, deduped, EMPTY-padded)."""
+    n = _next_pow2(max(a.capacity, b.capacity))
+    a = _pad_state(a, n)
+    b = _pad_state(b, n)
+    ka, ca, sa, mna, mxa = _state_to_tiles(a, n)
+    kb, cb, sb, mnb, mxb = _state_to_tiles(b, n)
+    k2, c2, s2, mn2, mx2, tails = _ma.merge_absorb_tiles(
+        ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb, interpret=INTERPRET
+    )
+    return _compact(k2, c2, s2, mn2, mx2, tails, a.width)
+
+
+def _pad_val(x):
+    if x.dtype == jnp.uint32:
+        return EMPTY
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return 0.0
+    return 0
+
+
+def _pad_state(state: AggState, n: int) -> AggState:
+    if state.capacity == n:
+        return state
+    pad = n - state.capacity
+    return AggState(
+        keys=jnp.concatenate([state.keys, jnp.full((pad,), EMPTY, jnp.uint32)]),
+        count=jnp.concatenate([state.count, jnp.zeros((pad,), state.count.dtype)]),
+        sum=jnp.concatenate([state.sum, jnp.zeros((pad, state.width), jnp.float32)]),
+        min=jnp.concatenate(
+            [state.min, jnp.full((pad, state.width), jnp.inf, jnp.float32)]
+        ),
+        max=jnp.concatenate(
+            [state.max, jnp.full((pad, state.width), -jnp.inf, jnp.float32)]
+        ),
+    )
+
+
+def moe_grouped_matmul(x, w, *, capacity, block_m=128, block_n=128, block_k=128):
+    return _gm.grouped_matmul(
+        x, w, capacity=capacity, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=INTERPRET,
+    )

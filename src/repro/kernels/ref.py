@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+They are also the XLA fallback path used on CPU and inside dry-runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import EMPTY
+
+
+def ref_sort(keys: jax.Array) -> jax.Array:
+    """(T, N) → keys sorted along the last axis."""
+    return jnp.sort(keys, axis=-1)
+
+
+def ref_argsort(keys: jax.Array) -> jax.Array:
+    return jnp.argsort(keys, axis=-1)
+
+
+def ref_segmented_scan(keys, cnt, ssum, smin, smax):
+    """Per-tile segmented inclusive scan over sorted keys.
+
+    keys/cnt (T, N); ssum/smin/smax (T, V, N).  Returns scanned columns and
+    the tail mask, like repro.kernels.segmented_reduce.segmented_scan_tiles.
+    """
+    t, n = keys.shape
+    idx = jnp.arange(n)[None, :]
+    valid = keys != EMPTY
+    heads = jnp.concatenate(
+        [jnp.ones((t, 1), bool), keys[:, 1:] != keys[:, :-1]], axis=1
+    )
+    seg = jnp.cumsum(heads, axis=1) - 1  # (T, N) segment ids
+
+    def scan_tile(seg_t, col_t, op, init):
+        # column (V, N) — segment_scan via associative ops per segment
+        def f(carry, x):
+            s, v = x
+            new = jnp.where(s == carry[0], op(carry[1], v), v)
+            return (s, new), new
+
+        (_, _), out = jax.lax.scan(
+            f, (jnp.int32(-1), jnp.full(col_t.shape[:-1], init, col_t.dtype)),
+            (seg_t, jnp.moveaxis(col_t, -1, 0)),
+        )
+        return jnp.moveaxis(out, 0, -1)
+
+    cnt_s = jnp.stack(
+        [scan_tile(seg[i], cnt[i][None], jnp.add, 0)[0] for i in range(t)]
+    )
+    sum_s = jnp.stack([scan_tile(seg[i], ssum[i], jnp.add, 0.0) for i in range(t)])
+    min_s = jnp.stack(
+        [scan_tile(seg[i], smin[i], jnp.minimum, jnp.inf) for i in range(t)]
+    )
+    max_s = jnp.stack(
+        [scan_tile(seg[i], smax[i], jnp.maximum, -jnp.inf) for i in range(t)]
+    )
+    tails = (
+        jnp.concatenate([keys[:, :-1] != keys[:, 1:], jnp.ones((t, 1), bool)], axis=1)
+        & valid
+    )
+    return cnt_s, sum_s, min_s, max_s, tails
+
+
+def ref_merge_absorb(ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb):
+    """Oracle for merge_aggregate: concat → sort → segmented scan."""
+    keys = jnp.concatenate([ka, kb], axis=-1)
+    perm = jnp.argsort(keys, axis=-1)
+    g1 = lambda x, y: jnp.take_along_axis(jnp.concatenate([x, y], -1), perm, axis=-1)
+    gv = lambda x, y: jnp.take_along_axis(
+        jnp.concatenate([x, y], -1), perm[:, None, :], axis=-1
+    )
+    keys = jnp.take_along_axis(keys, perm, axis=-1)
+    return (keys,) + ref_segmented_scan(
+        keys, g1(ca, cb), gv(sa, sb), gv(mna, mnb), gv(mxa, mxb)
+    )
+
+
+def ref_grouped_matmul(x, w, *, capacity: int):
+    e = w.shape[0]
+    xs = x.reshape(e, capacity, x.shape[-1])
+    return jnp.einsum("ecd,edf->ecf", xs, w).reshape(e * capacity, w.shape[-1]).astype(x.dtype)

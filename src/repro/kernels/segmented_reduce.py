@@ -1,0 +1,98 @@
+"""Segmented reduce-by-key over sorted tiles — the "absorb" hot spot.
+
+Given key-sorted rows, equal keys form segments; the paper's b-tree absorb
+(aggregate a row into its group) becomes a **flag-based segmented scan**:
+
+    for d in 1, 2, 4, … N/2:
+        v[i] ← v[i] ⊕ v[i−d]   unless a segment boundary lies in (i−d, i]
+        f[i] ← f[i] ∨ f[i−d]
+
+log₂N data-parallel steps, each a lane roll + masked combine — exactly the
+structure the bitonic kernel uses, so both map onto the same VPU idiom.
+Segment *tails* then hold complete group aggregates (count/sum/min/max);
+compaction of tails to the front is a cheap memory-bound scatter done by
+the XLA caller (see ops.py) — the O(N log N) compute lives here.
+
+The kernel carries all aggregate columns in one fused pass: count and sum
+scan with ⊕ = add, min/max columns with ⊕ = min/max, sharing the boundary
+flags and the rolls' mask logic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.types import EMPTY
+
+
+def _segmented_scan(keys, cnt, ssum, smin, smax):
+    """keys (1,N); cnt (1,N); ssum/smin/smax (V,N). Returns scanned values
+    and the tail mask (last row of each segment)."""
+    n = keys.shape[-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, keys.shape, 1)
+    valid = keys != EMPTY
+    prev_keys = jnp.roll(keys, 1, axis=-1)
+    heads = (keys != prev_keys) | (idx == 0)
+    f = heads | ~valid
+    d = 1
+    while d < n:
+        fd = jnp.roll(f, d, axis=-1)
+        edge = idx < d
+        can_add = (~f) & (~edge)
+        cd = jnp.roll(cnt, d, axis=-1)
+        cnt = jnp.where(can_add, cnt + cd, cnt)
+        # value columns broadcast the (1,N) mask over their V rows
+        sd = jnp.roll(ssum, d, axis=-1)
+        ssum = jnp.where(can_add, ssum + sd, ssum)
+        mnd = jnp.roll(smin, d, axis=-1)
+        smin = jnp.where(can_add, jnp.minimum(smin, mnd), smin)
+        mxd = jnp.roll(smax, d, axis=-1)
+        smax = jnp.where(can_add, jnp.maximum(smax, mxd), smax)
+        f = f | (fd & ~edge) | edge
+        d *= 2
+    next_keys = jnp.roll(keys, -1, axis=-1)
+    tails = ((keys != next_keys) | (idx == n - 1)) & valid
+    return cnt, ssum, smin, smax, tails
+
+
+def _kernel(k_ref, c_ref, s_ref, mn_ref, mx_ref,
+            oc_ref, os_ref, omn_ref, omx_ref, ot_ref):
+    cnt, ssum, smin, smax, tails = _segmented_scan(
+        k_ref[...], c_ref[...], s_ref[...], mn_ref[...], mx_ref[...]
+    )
+    oc_ref[...] = cnt
+    os_ref[...] = ssum
+    omn_ref[...] = smin
+    omx_ref[...] = smax
+    ot_ref[...] = tails
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segmented_scan_tiles(keys, cnt, ssum, smin, smax, *, interpret: bool = True):
+    """(T,N) keys/cnt and (T,V,N) value tiles → scanned values + tail mask."""
+    t, n = keys.shape
+    v = ssum.shape[1]
+    spec1 = pl.BlockSpec((1, n), lambda i: (i, 0))
+    specv = pl.BlockSpec((1, v, n), lambda i: (i, 0, 0))
+    # kernel refs drop the leading block dim of size 1 via index maps below
+    def k1(ref):
+        return ref
+
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t, n), cnt.dtype),
+            jax.ShapeDtypeStruct((t, v, n), ssum.dtype),
+            jax.ShapeDtypeStruct((t, v, n), smin.dtype),
+            jax.ShapeDtypeStruct((t, v, n), smax.dtype),
+            jax.ShapeDtypeStruct((t, n), jnp.bool_),
+        ),
+        grid=(t,),
+        in_specs=[spec1, spec1, specv, specv, specv],
+        out_specs=(spec1, specv, specv, specv, spec1),
+        interpret=interpret,
+    )(keys, cnt, ssum, smin, smax)
+    return out

@@ -1,0 +1,324 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes, prove memory fits, and extract roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--out results.json]
+
+The XLA_FLAGS line above MUST run before any jax import: it provides 512
+placeholder host devices for the 2×16×16 production mesh.
+"""
+import argparse
+import dataclasses as dc
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import all_arch_ids, get_config
+from repro.launch import roofline as RL
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def dryrun_cell(arch: str, shape: str, *, multi_pod: bool = False,
+                verbose: bool = True, dispatch: str | None = None,
+                extra=None):
+    """Lower+compile one cell; returns a result dict (or skip record)."""
+    cfg = get_config(arch)
+    skip = ST.shape_skips(cfg, shape)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if skip:
+        rec["status"] = "skip"
+        rec["reason"] = skip
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = dc.replace(cfg, mesh_axes=tuple(mesh.axis_names))
+    from repro.distributed import moe_parallel as MP
+    MP.set_current_mesh(mesh)
+    chips = mesh.devices.size
+    info = ST.SHAPES[shape]
+    kind = info["kind"]
+    t0 = time.time()
+    try:
+      with mesh:
+          batch_sds = ST.input_specs(cfg, shape)
+          batch_sh = ST.batch_shardings(cfg, mesh, shape)
+          if kind == "train":
+              step, _, opt_name = ST.make_train_step(cfg, dispatch=dispatch)
+              state_sds = ST.abstract_train_state(cfg, opt_name)
+              state_sh = ST.state_shardings(cfg, mesh, opt_name)
+              jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                               out_shardings=(state_sh, None),
+                               donate_argnums=(0,))
+              lowered = jitted.lower(state_sds, batch_sds)
+              rec["optimizer"] = opt_name
+          else:
+              pshapes, logical = ST.abstract_init(cfg)
+              from repro.distributed import sharding as SH
+
+              pspecs = SH.tree_specs(logical, SH.rules_for_mesh(mesh))
+              psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+              if kind == "prefill":
+                  fn = ST.make_prefill_step(cfg, max_len=info["seq"])
+                  out_sh = (None, ST.batch_shardings(cfg, mesh, _decode_shape(shape))["caches"])
+                  jitted = jax.jit(fn, in_shardings=(psh, batch_sh),
+                                   out_shardings=out_sh)
+              else:
+                  fn = ST.make_serve_step(cfg)
+                  out_sh = (None, batch_sh["caches"])
+                  jitted = jax.jit(fn, in_shardings=(psh, batch_sh),
+                                   out_shardings=out_sh,
+                                   donate_argnums=(1,))
+              lowered = jitted.lower(pshapes, batch_sds)
+          compiled = lowered.compile()
+          rec["lower_compile_s"] = round(time.time() - t0, 1)
+          mem = compiled.memory_analysis()
+          rec["memory"] = {
+              "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+              "output_bytes": getattr(mem, "output_size_in_bytes", None),
+              "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+              "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+          }
+          arg_b = rec["memory"]["argument_bytes"] or 0
+          tmp_b = rec["memory"]["temp_bytes"] or 0
+          # memory_analysis reports per-device figures on SPMD modules.
+          # CPU-backend caveat (verified on a minimal repro): XLA-CPU has no
+          # native bf16 dot, so it converts bf16 operands to f32 and hoists
+          # the converted copies out of loops — temp doubles vs TPU, where
+          # bf16 dots are native.  Correct bf16 programs by 2× and report
+          # both numbers.
+          corrected = tmp_b / 2 if cfg.dtype == "bfloat16" else tmp_b
+          rec["memory"]["temp_bytes_tpu_corrected"] = corrected
+          per_dev = arg_b + corrected
+          rec["memory"]["per_device_estimate"] = per_dev
+          rec["memory"]["fits_16GB"] = bool(per_dev < HBM_PER_CHIP)
+          rl = RL.from_compiled(compiled, chips)
+          rec["roofline"] = rl.as_dict()
+          rec["roofline"]["collective_breakdown"] = {
+              k: v for k, v in (rl.coll_breakdown or {}).items()
+              if not str(k).startswith("_")
+          }
+          rec["roofline"]["collective_counts"] = (rl.coll_breakdown or {}).get("_counts")
+          mf = RL.model_flops(cfg, info, kind)
+          rec["roofline"]["model_flops"] = mf
+          rec["roofline"]["useful_flops_frac"] = (
+              mf / rl.flops if rl.flops else None
+          )
+          rec["status"] = "ok"
+          if verbose:
+              print(f"[{rec['mesh']}] {arch} × {shape}: OK "
+                    f"({rec['lower_compile_s']}s compile)")
+              print("  memory:", rec["memory"])
+              print("  roofline:", {k: v for k, v in rec["roofline"].items()
+                                    if k != "collective_breakdown"})
+    except Exception as e:  # sharding mismatch, OOM at compile, …
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=8)
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} × {shape}: FAIL {rec['error']}")
+    return rec
+
+
+def _decode_shape(prefill_shape: str) -> str:
+    return {"prefill_32k": "decode_32k"}.get(prefill_shape, prefill_shape)
+
+
+# ---------------------------------------------------------------------------
+# calibrated roofline: XLA cost_analysis counts a lax.scan body ONCE, so we
+# measure two small-depth UNROLLED variants at full width/batch/mesh and
+# linearly extrapolate:  total(L) = base + L·marginal.
+# ---------------------------------------------------------------------------
+
+
+def _measure_costs(cfg, shape: str, mesh, dispatch=None):
+    """(flops, hbm_bytes, coll_bytes/device) of one compiled variant."""
+    cfg = dc.replace(cfg, mesh_axes=tuple(mesh.axis_names))
+    from repro.distributed import moe_parallel as MP
+    MP.set_current_mesh(mesh)
+    info = ST.SHAPES[shape]
+    kind = info["kind"]
+    batch_sds = ST.input_specs(cfg, shape)
+    batch_sh = ST.batch_shardings(cfg, mesh, shape)
+    with mesh:
+      if kind == "train":
+        step, _, opt_name = ST.make_train_step(cfg, dispatch=dispatch)
+        state_sds = ST.abstract_train_state(cfg, opt_name)
+        state_sh = ST.state_shardings(cfg, mesh, opt_name)
+        lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                          out_shardings=(state_sh, None),
+                          donate_argnums=(0,)).lower(state_sds, batch_sds)
+      else:
+        from repro.distributed import sharding as SH
+
+        pshapes, logical = ST.abstract_init(cfg)
+        pspecs = SH.tree_specs(logical, SH.rules_for_mesh(mesh))
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        if kind == "prefill":
+            fn = ST.make_prefill_step(cfg, max_len=info["seq"])
+            out_sh = (None, ST.batch_shardings(cfg, mesh, _decode_shape(shape))["caches"])
+            lowered = jax.jit(fn, in_shardings=(psh, batch_sh),
+                              out_shardings=out_sh).lower(pshapes, batch_sds)
+        else:
+            fn = ST.make_serve_step(cfg)
+            lowered = jax.jit(fn, in_shardings=(psh, batch_sh),
+                              out_shardings=(None, batch_sh["caches"]),
+                              donate_argnums=(1,)).lower(pshapes, batch_sds)
+      compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = RL.collective_bytes(compiled.as_text())
+    total_coll = sum(v for k, v in coll.items() if not str(k).startswith("_"))
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            total_coll, coll.get("_counts"))
+
+
+def _depth_variants(cfg):
+    """Two reduced-depth configs + the depth multiplier to full scale.
+
+    For hybrid archs the repeating unit is one (period mamba + shared
+    attention) group; otherwise it's a single layer of the homogeneous
+    (or MoE) stack."""
+    import dataclasses as dc
+
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_shared_period
+        a = dc.replace(cfg, n_layers=per, scan_layers=False)
+        b = dc.replace(cfg, n_layers=2 * per, scan_layers=False)
+        units = cfg.n_layers // per
+        return a, b, units
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        kd = cfg.moe.first_k_dense
+        a = dc.replace(cfg, n_layers=kd + 1, scan_layers=False)
+        b = dc.replace(cfg, n_layers=kd + 2, scan_layers=False)
+        units = cfg.n_layers - kd
+        return a, b, units
+    a = dc.replace(cfg, n_layers=1, scan_layers=False)
+    b = dc.replace(cfg, n_layers=2, scan_layers=False)
+    units = cfg.n_layers
+    return a, b, units
+
+
+def apply_overrides(cfg, overrides):
+    """dc.replace with dotted keys for nested configs (moe.capacity_factor)."""
+    if not overrides:
+        return cfg
+    direct = {k: v for k, v in overrides.items() if "." not in k}
+    nested = {k: v for k, v in overrides.items() if "." in k}
+    if direct:
+        cfg = dc.replace(cfg, **direct)
+    for k, v in nested.items():
+        sub, field = k.split(".", 1)
+        cfg = dc.replace(cfg, **{sub: dc.replace(getattr(cfg, sub), **{field: v})})
+    return cfg
+
+
+def calibrated_roofline(arch: str, shape: str, *, multi_pod: bool = False,
+                        dispatch: str | None = None, overrides=None):
+    """Roofline terms with scan-trip-count-corrected totals.
+
+    Known residual undercounts (documented): nested scans inside ONE layer
+    (MoE token-chunk loop, attention q-chunk loop) are still counted once
+    by XLA; totals are corrected for the layer scan and the grad-accum
+    scan, which dominate.  Comparisons that vary inner chunk counts must
+    use op-count/buffer metrics instead (see §Perf cell B)."""
+    cfg = apply_overrides(get_config(arch), overrides)
+    skip = ST.shape_skips(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape, "status": "skip", "reason": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    a, b, units = _depth_variants(cfg)
+    fa, ba, ca_, cnt_a = _measure_costs(a, shape, mesh, dispatch)
+    fb, bb, cb_, cnt_b = _measure_costs(b, shape, mesh, dispatch)
+    info0 = ST.SHAPES[shape]
+    accum = cfg.grad_accum if info0["kind"] == "train" else 1
+    # the grad-accum scan body is also counted once: scale totals back
+    fa, ba, ca_ = fa * accum, ba * accum, ca_ * accum
+    fb, bb, cb_ = fb * accum, bb * accum, cb_ * accum
+    mf = max(1.0, fb - fa)
+    mbytes = max(0.0, bb - ba)
+    mcoll = max(0.0, cb_ - ca_)
+    base_f = max(0.0, fa - mf * (a.n_layers if cfg.family != "hybrid" else 1))
+    # base = measurement at depth a minus a's worth of marginals
+    units_a = (1 if cfg.family == "hybrid"
+               else (a.n_layers - (cfg.moe.first_k_dense if cfg.moe else 0))
+               if cfg.moe is not None and cfg.moe.first_k_dense else a.n_layers)
+    base_f = max(0.0, fa - mf * units_a)
+    base_b = max(0.0, ba - mbytes * units_a)
+    base_c = max(0.0, ca_ - mcoll * units_a)
+    flops = base_f + mf * units
+    hbm = base_b + mbytes * units
+    coll = base_c + mcoll * units
+    info = ST.SHAPES[shape]
+    rl = RL.Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll, chips=chips)
+    rec = {"arch": arch, "shape": shape, "status": "ok",
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "roofline": rl.as_dict()}
+    mfl = RL.model_flops(cfg, info, info["kind"])
+    rec["roofline"]["model_flops"] = mfl
+    # cost_analysis flops are per-device on SPMD modules: scale by chips
+    rec["roofline"]["useful_flops_frac"] = mfl / (flops * chips) if flops else None
+    rec["roofline"]["collective_counts"] = cnt_b
+    rec["units"] = units
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--dispatch", default=None, choices=[None, "dense", "sorted"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in all_arch_ids():
+            for shape in ST.SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multipod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    for mp in meshes:
+        for arch, shape in cells:
+            results.append(dryrun_cell(arch, shape, multi_pod=mp,
+                                       dispatch=args.dispatch))
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum(r["status"] == "skip" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\n== dry-run: {ok} ok, {skip} skip, {err} error ==")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print("wrote", args.out)
+    return 0 if err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,114 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline from sweep artifacts.
+
+  PYTHONPATH=src python -m repro.launch.make_report \
+      --dryrun dryrun_results.json --calibrate --out experiments_tables.md
+"""
+import argparse
+import json
+
+from repro.configs import all_arch_ids
+from repro.launch import steps as ST
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}G"
+
+
+def dryrun_table(results):
+    lines = [
+        "| arch | shape | mesh | status | compile_s | args/dev | temp/dev (tpu-corr) | fits 16G | collectives (AG/AR/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r["status"] == "skip":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP: {r['reason']} | | | | | |")
+            continue
+        if r["status"] == "error":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL**: {r['error'][:60]} | | | | | |")
+            continue
+        m = r["memory"]
+        cc = r["roofline"].get("collective_counts") or {}
+        cstr = "/".join(str(cc.get(k, 0)) for k in (
+            "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r.get('lower_compile_s','-')} | {fmt_bytes(m['argument_bytes'])} "
+            f"| {fmt_bytes(m['temp_bytes_tpu_corrected'])} "
+            f"| {'✓' if m['fits_16GB'] else '✗'} | {cstr} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck | MODEL_FLOPS | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP: {r.get('reason','')} | | | | | | |")
+            continue
+        rl = r["roofline"]
+        uf = rl.get("useful_flops_frac")
+        # roofline fraction: useful model flops over the machine-time the
+        # dominant term implies (how close the step is to the best term)
+        t_dom = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        mf = rl.get("model_flops", 0.0)
+        frac = (mf / (256 * 197e12)) / t_dom if t_dom else 0.0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['t_compute_s']*1e3:.1f}ms "
+            f"| {rl['t_memory_s']*1e3:.1f}ms | {rl['t_collective_s']*1e3:.1f}ms "
+            f"| **{rl['bottleneck']}** | {mf:.2e} | {uf:.3f} | {frac:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="dryrun_results.json")
+    ap.add_argument("--calibrate", action="store_true")
+    ap.add_argument("--calib-out", default="roofline_calibrated.json")
+    ap.add_argument("--out", default="experiments_tables.md")
+    args = ap.parse_args()
+
+    out = []
+    with open(args.dryrun) as f:
+        results = json.load(f)
+    out.append("## §Dry-run (raw sweep)\n")
+    out.append(dryrun_table(results))
+
+    if args.calibrate:
+        from repro.launch.dryrun import calibrated_roofline
+
+        recs = []
+        for arch in all_arch_ids():
+            for shape in ST.SHAPES:
+                try:
+                    rec = calibrated_roofline(arch, shape)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "status": "error",
+                           "reason": f"{type(e).__name__}: {e}"}
+                recs.append(rec)
+                print(arch, shape, rec["status"],
+                      rec.get("roofline", {}).get("bottleneck", rec.get("reason", "")))
+        with open(args.calib_out, "w") as f:
+            json.dump(recs, f, indent=1, default=str)
+        out.append("\n\n## §Roofline (calibrated, single-pod 16×16)\n")
+        out.append(roofline_table(recs))
+
+    with open(args.out, "w") as f:
+        f.write("\n".join(out) + "\n")
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production mesh construction (never touches jax device state at import).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e-256).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; "pod" is a pure
+data-parallel (or pipeline) axis across the slower inter-pod links.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for multi-device unit tests (8 host devices)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,150 @@
+"""Roofline-term derivation from compiled dry-run artifacts (§Roofline).
+
+    compute    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes / (chips × 819 GB/s HBM)
+    collective = wire_bytes / (chips × 2 links × 50 GB/s)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (whole-program, all
+chips).  Collective bytes are parsed from the post-SPMD HLO text: we sum
+the per-shard result sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, with wire factors
+(all-reduce 2×: reduce-scatter + all-gather phases of a ring).  The "2
+links" divisor models the two usable ICI directions per torus axis on a
+v5e; stated here once and used consistently for baseline vs optimized
+comparisons.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9       # bytes/s per chip
+LINK_BW = 50e9       # bytes/s per ICI link
+LINKS = 2            # usable links per chip per collective step
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective-kind wire bytes (per device) from post-SPMD HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\([^)]*\)|\S+) ([\w\-]+)", ls)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-start") or opname == c + "-done":
+                kind = c
+                break
+        if kind is None:
+            continue
+        if opname.endswith("-done"):
+            continue  # avoid double counting start/done pairs
+        b = _shape_bytes(shape_str)
+        out[kind] += b * _WIRE_FACTOR[kind]
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All inputs are PER-DEVICE quantities: XLA cost_analysis on an SPMD
+    module reports the per-device program (verified empirically), and the
+    collective parser reads per-shard shapes from the partitioned HLO."""
+
+    flops: float        # per device
+    hbm_bytes: float    # per device
+    coll_bytes: float   # per device (wire)
+    chips: int
+    coll_breakdown: dict | None = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        # coll_bytes is per-device wire bytes already
+        return self.coll_bytes / (LINKS * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self):
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def from_compiled(compiled, chips: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    total_coll = sum(v for k, v in coll.items() if not k.startswith("_"))
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=total_coll,
+                    chips=chips, coll_breakdown=coll)
+
+
+def model_flops(cfg, shape_info, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (training) or 2·N·D (decode/prefill forward),
+    with N = active params for MoE."""
+    n = cfg.active_param_count()
+    b, s = shape_info["batch"], shape_info["seq"]
+    if kind == "train":
+        tokens = b * s
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        return 2.0 * n * b * s
+    return 2.0 * n * b  # decode: one token per sequence

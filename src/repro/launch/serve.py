@@ -1,0 +1,74 @@
+"""Batched serving driver: continuous-batching decode loop with prefill
+admission — the serving-side example application.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import steps as ST
+from repro.models import model as M
+
+
+def serve(arch: str, *, smoke=True, batch=4, prompt_len=32, gen=16,
+          max_len=None, seed=0):
+    cfg = get_config(arch, smoke=smoke)
+    max_len = max_len or (prompt_len + gen)
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+
+    params, _ = M.init(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(ST.make_prefill_step(cfg, max_len))
+    decode = jax.jit(ST.make_serve_step(cfg), donate_argnums=())
+
+    t0 = time.time()
+    batch_in = {"tokens": jnp.asarray(prompts)}
+    if cfg.frontend_stub:
+        emb = jnp.asarray(rng.normal(size=(cfg.vocab, cfg.d_model)) * 0.02,
+                          jnp.float32)
+        batch_in["tokens"] = jnp.take(emb, batch_in["tokens"], axis=0)
+    if cfg.rope == "mrope":
+        batch_in["mrope_pos"] = jnp.broadcast_to(
+            jnp.arange(prompt_len, dtype=jnp.int32), (3, batch, prompt_len))
+    logits, caches = prefill(params, batch_in)
+    t_prefill = time.time() - t0
+    out_tokens = [np.asarray(jnp.argmax(logits[:, -1], -1))]
+    t0 = time.time()
+    for i in range(gen - 1):
+        tok = jnp.asarray(out_tokens[-1][:, None])
+        step_in = {"token": tok, "caches": caches}
+        if cfg.rope == "mrope":
+            step_in["mrope_pos"] = jnp.full((3, batch, 1), prompt_len + i,
+                                            jnp.int32)
+        logits, caches = decode(params, step_in)
+        out_tokens.append(np.asarray(jnp.argmax(logits[:, -1], -1)))
+    t_decode = (time.time() - t0) / max(1, gen - 1)
+    gen_ids = np.stack(out_tokens, axis=1)
+    return gen_ids, t_prefill, t_decode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    ids, tp, td = serve(args.arch, smoke=not args.full, batch=args.batch,
+                        prompt_len=args.prompt_len, gen=args.gen)
+    print(f"generated {ids.shape} tokens; prefill {tp*1e3:.1f} ms, "
+          f"decode {td*1e3:.2f} ms/token")
+    print("sample:", ids[0][:12])
+
+
+if __name__ == "__main__":
+    main()

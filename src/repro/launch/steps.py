@@ -1,0 +1,252 @@
+"""Distributed train/serve step builders + input stand-ins for every
+(architecture × shape) cell.
+
+``train_step``  : fwd + loss + bwd + optimizer update (DP/FSDP/TP/EP).
+``prefill_step``: forward over the full prompt, building the decode cache.
+``serve_step``  : one-token decode against a seq_len KV/SSM cache.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs —
+the dry-run lowers and compiles against these without allocating.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import clip_by_global_norm, make_optimizer, cosine_schedule
+from repro.distributed import sharding as SH
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_m: Any
+    opt_v: Any
+    step: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# shapes (the four assigned input-shape sets)
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def shape_skips(cfg: ModelConfig, shape: str) -> str | None:
+    """Returns a skip reason or None (see DESIGN.md §Arch-applicability)."""
+    if cfg.family == "encoder" and SHAPES[shape]["kind"] == "decode":
+        return "encoder-only architecture has no decode step"
+    if shape == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return "long_500k needs sub-quadratic attention; full-attention arch"
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: str, mesh=None):
+    """ShapeDtypeStructs for every model input of this cell (no allocation)."""
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    f32 = jnp.bfloat16
+    out: dict[str, Any] = {}
+    if kind == "train":
+        if cfg.frontend_stub:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), f32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.rope == "mrope":
+            out["mrope_pos"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    elif kind == "prefill":
+        if cfg.frontend_stub:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), f32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.rope == "mrope":
+            out["mrope_pos"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    else:  # decode
+        out["token"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        out["caches"] = jax.eval_shape(
+            lambda: M.init_cache(cfg, b, s, dtype=jnp.bfloat16)
+        )
+        if cfg.rope == "mrope":
+            out["mrope_pos"] = jax.ShapeDtypeStruct((3, b, 1), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, *, optimizer: str | None = None,
+                    lr: float = 3e-4, grad_clip: float = 1.0,
+                    dispatch: str | None = None):
+    opt_name = optimizer or default_optimizer(cfg)
+    init_opt, update = make_optimizer(opt_name, cosine_schedule(lr, 200, 10_000))
+
+    def loss_fn(params, batch):
+        return M.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                         mrope_pos=batch.get("mrope_pos"), dispatch=dispatch)
+
+    def train_step(state: TrainState, batch):
+        accum = cfg.grad_accum
+        if accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch
+            )
+        else:
+            # scanned microbatches: activation live-set /= accum; gradients
+            # accumulate in param dtype (bf16) to hold the memory plan of
+            # the ≥100B models (documented trade-off).
+            def _split(key, x):
+                if key == "mrope_pos":  # (3, B, S): batch axis is 1
+                    b = x.shape[1]
+                    x = x.reshape((3, accum, b // accum) + x.shape[2:])
+                    return jnp.moveaxis(x, 1, 0)
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+            mb = {k: _split(k, v) for k, v in batch.items()}
+
+            def mb_step(acc, mbatch):
+                (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mbatch
+                )
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype), acc, g)
+                return acc, (l, met)
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                state.params)
+            grads, (losses, mets) = jax.lax.scan(mb_step, acc0, mb)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), mets)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        from repro.optim.optimizers import OptState
+
+        new_params, opt = update(
+            grads, OptState(state.step, state.opt_m, state.opt_v), state.params
+        )
+        new_state = TrainState(new_params, opt.m, opt.v, opt.step)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+
+    def init_state(key):
+        params, _ = M.init(cfg, key)
+        opt = init_opt(params)
+        return TrainState(params, opt.m, opt.v, jnp.zeros((), jnp.int32))
+
+    return train_step, init_state, opt_name
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill(params, batch):
+        b = batch["tokens"].shape[0]
+        caches = M.init_cache(cfg, b, max_len)
+        logits, new_caches, _ = M.forward(
+            params, cfg, batch["tokens"], caches=caches,
+            mrope_pos=batch.get("mrope_pos"),
+        )
+        return logits[:, -1:], new_caches
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, batch):
+        logits, new_caches = M.decode_step(
+            params, cfg, batch["token"], batch["caches"],
+            mrope_pos=batch.get("mrope_pos"),
+        )
+        return logits, new_caches
+
+    return serve_step
+
+
+def default_optimizer(cfg: ModelConfig) -> str:
+    """Adafactor for the ≥100B models (fp32 Adam moments alone would
+    exceed v5e HBM at 256 chips); AdamW otherwise."""
+    return "adafactor" if cfg.param_count() > 60e9 else "adamw"
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly for a cell
+# ---------------------------------------------------------------------------
+
+
+def abstract_init(cfg: ModelConfig):
+    """(param ShapeDtypeStructs, logical spec tree) with zero allocation.
+
+    The spec tree is plain python data built alongside the params, so we
+    capture it through a side channel while eval_shape traces init.
+    """
+    box = {}
+
+    def f(k):
+        p, s = M.init(cfg, k)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def state_shardings(cfg: ModelConfig, mesh, opt_name: str):
+    _, logical = abstract_init(cfg)
+    pspecs = SH.tree_specs(logical, SH.rules_for_mesh(mesh))
+    step_spec, m_specs, v_specs = SH.opt_state_specs(pspecs, opt_name)
+    to_sh = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P)
+    )
+    return TrainState(
+        params=to_sh(pspecs), opt_m=to_sh(m_specs), opt_v=to_sh(v_specs),
+        step=NamedSharding(mesh, P()),
+    )
+
+
+def abstract_train_state(cfg: ModelConfig, opt_name: str):
+    """TrainState of ShapeDtypeStructs (dry-run stand-in)."""
+    pshapes, _ = abstract_init(cfg)
+    init_opt, _ = make_optimizer(opt_name, 1e-3)
+    opt_shapes = jax.eval_shape(init_opt, pshapes)
+    return TrainState(pshapes, opt_shapes.m, opt_shapes.v,
+                      jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def batch_shardings(cfg: ModelConfig, mesh, shape: str):
+    specs = input_specs(cfg, shape)
+    info = SHAPES[shape]
+    dp_total = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp_total *= mesh.shape[a]
+    shard_batch = info["batch"] % dp_total == 0
+    out = {}
+    for k, v in specs.items():
+        if k == "caches":
+            cspec = SH.cache_specs(cfg, mesh)
+            if not shard_batch:  # e.g. long_500k global batch 1: replicate
+                cspec = jax.tree.map(
+                    lambda s: P(*(tuple(None if i == 1 else ax
+                                        for i, ax in enumerate(s)))),
+                    cspec, is_leaf=lambda x: isinstance(x, P))
+            out[k] = jax.tree.map(lambda s: NamedSharding(mesh, s), cspec,
+                                  is_leaf=lambda x: isinstance(x, P))
+        elif k == "mrope_pos":
+            sp = (SH.batch_spec(mesh, v.ndim, batch_axis=1) if shard_batch
+                  else P())
+            out[k] = NamedSharding(mesh, sp)
+        else:
+            sp = SH.batch_spec(mesh, v.ndim) if shard_batch else P()
+            out[k] = NamedSharding(mesh, sp)
+    return out

@@ -1,0 +1,107 @@
+"""End-to-end training driver: data pipeline → sharded train loop →
+checkpoint/restart — runnable on 1 CPU device (smoke configs) and, with
+the same code path, on the production meshes.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt /tmp/ckpt
+
+Fault tolerance: checkpoints carry model+optimizer state AND the data
+loader cursor; `--resume` restarts bit-exactly (tested).  On preemption
+(SIGTERM) the loop saves and exits cleanly.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses as dc
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataLoader
+from repro.launch import steps as ST
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
+          seq: int = 128, ckpt_dir: str | None = None, resume: bool = False,
+          lr: float = 3e-4, log_every: int = 10, save_every: int = 25,
+          mesh=None):
+    cfg = get_config(arch, smoke=smoke)
+    if mesh is not None:
+        cfg = dc.replace(cfg, mesh_axes=tuple(mesh.axis_names))
+    train_step, init_state, opt_name = ST.make_train_step(cfg, lr=lr)
+    step_fn = jax.jit(train_step, donate_argnums=(0,))
+
+    state = init_state(jax.random.PRNGKey(0))
+    loader = DataLoader(cfg.vocab, batch, seq, seed=17)
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    if mgr and resume and mgr.latest_step() is not None:
+        state, manifest = mgr.restore(state)
+        loader = DataLoader.from_state(cfg.vocab, batch, seq,
+                                       manifest["extras"]["loader"])
+        start_step = manifest["step"]
+        print(f"resumed from step {start_step}")
+
+    stop = {"now": False}
+    signal.signal(signal.SIGTERM, lambda *_: stop.update(now=True))
+
+    losses = []
+    t0 = time.time()
+    for i in range(start_step, steps):
+        batch_np = loader.next()
+        b = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
+                                   (3, batch, seq))
+            b["mrope_pos"] = pos
+        if cfg.frontend_stub:
+            # modality stub: embed tokens through a fixed projection stand-in
+            rng = np.random.default_rng(0)
+            # deterministic pseudo-embeddings keyed by token id
+            emb = jnp.asarray(rng.normal(size=(cfg.vocab, cfg.d_model)) * 0.02,
+                              jnp.float32)
+            b["tokens"] = jnp.take(emb, b["tokens"], axis=0)
+        state, metrics = step_fn(state, b)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % log_every == 0:
+            dt = (time.time() - t0) / log_every
+            print(f"step {i+1}: loss={losses[-1]:.4f} "
+                  f"nll={float(metrics['nll']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f} ms/step")
+            t0 = time.time()
+        if mgr and ((i + 1) % save_every == 0 or stop["now"] or i + 1 == steps):
+            mgr.save(state, i + 1, extras={"loader": loader.state()},
+                     blocking=False)
+        if stop["now"]:
+            print("preemption signal: checkpoint saved, exiting")
+            break
+    if mgr:
+        mgr.wait()
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full", action="store_true", help="full (non-smoke) config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    losses = train(args.arch, smoke=not args.full, steps=args.steps,
+                   batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt,
+                   resume=args.resume, lr=args.lr)
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

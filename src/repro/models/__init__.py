@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, MoEConfig, MLAConfig, SSMConfig
+from repro.models import model

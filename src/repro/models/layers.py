@@ -1,0 +1,371 @@
+"""Model substrate: norms, projections, RoPE/M-RoPE, GQA and MLA attention
+(with flash-style chunked softmax), and MLPs.  Pure JAX — distribution
+comes from pjit shardings on the parameter/activation pytrees.
+
+Parameters are plain nested dicts; initializers return (params, specs)
+where specs mirror the structure with logical-axis tuples consumed by
+repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+Params = dict
+Specs = dict
+
+_INIT_SCALE = 1.0
+
+
+def hint(x, cfg, *axes):
+    """Activation-sharding constraint ("dp" → all data axes, "model",
+    "sp" → "model" on a sequence dim when cfg.sp, None).
+
+    No-op when cfg.mesh_axes is unset (single-device paths).  These pins
+    keep GSPMD from flipping batch sharding around FSDP-sharded weights
+    (observed: replicated-batch f32 logits = 40 GB/device without them).
+    "sp" additionally sequence-shards the residual stream between blocks
+    (Megatron-SP): saved remat carries shrink by the TP degree.
+    """
+    if not cfg.mesh_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in ("pod", "data") if a in cfg.mesh_axes)
+    parts = []
+    for i, a in enumerate(axes):
+        if a == "dp":
+            if not dp:
+                parts.append(None)
+            else:
+                parts.append(dp if len(dp) > 1 else dp[0])
+        elif a == "sp":
+            parts.append("model" if (cfg.sp and x.shape[i] > 1) else None)
+        else:
+            parts.append(a)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+    except Exception:
+        return x
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def make_dense(key, d_in, d_out, dtype, *, bias=False, axes=("embed", "mlp")):
+    p = {"kernel": _dense_init(key, (d_in, d_out), d_in, dtype)}
+    s = {"kernel": axes}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+        s["bias"] = (axes[-1],)
+    return p, s
+
+
+def dense(p, x):
+    y = x @ p["kernel"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+def make_norm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(p, x, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    xdt = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(xdt)
+
+
+def apply_mrope(x, positions3, theta, sections=(16, 24, 24)):
+    """Qwen2-VL M-RoPE: positions3 (3, B, S) = (t, h, w) ids; the frequency
+    spectrum is split into three sections, each rotated by its own id."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)  # (half,)
+    # build a (B, S, half) angle with per-section position ids
+    parts, start = [], 0
+    for i, sec in enumerate(sections):
+        pos = positions3[i]  # (B, S)
+        ang = pos[..., None].astype(jnp.float32) * freqs[start : start + sec]
+        parts.append(ang)
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xdt = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(xdt)
+
+
+# ---------------------------------------------------------------------------
+# flash-style attention (pure JAX, chunked online softmax)
+# ---------------------------------------------------------------------------
+
+
+def _attn_chunked(q, k, v, *, causal: bool, q_offset, chunk_q: int, chunk_k: int):
+    """q (B,Sq,H,D); k,v (B,Sk,KH,D) already head-repeated to H.
+    Online-softmax over KV chunks; scanned over Q chunks.  Memory is
+    O(chunk_q × chunk_k) per head instead of O(Sq × Sk)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, sk)
+    nq, nk = sq // cq, sk // ck
+    assert sq % cq == 0 and sk % ck == 0
+    qc = q.reshape(b, nq, cq, h, d)
+    kc = k.reshape(b, nk, ck, h, d)
+    vc = v.reshape(b, nk, ck, h, d)
+
+    def q_step(_, qi):
+        qblk, iq = qi  # (B,cq,H,D), scalar chunk index
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(carry, kvi):
+            m, l, acc = carry
+            kblk, vblk, ik = kvi
+            k_pos = ik * ck + jnp.arange(ck)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk).astype(jnp.float32) * scale
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)),
+        )
+        l = jnp.maximum(l, 1e-20)
+        out = (acc / l[..., None]).transpose(0, 2, 1, 3)  # (B,cq,H,D)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        jax.checkpoint(q_step) if nq > 1 else q_step,
+        None, (qc.transpose(1, 0, 2, 3, 4), jnp.arange(nq))
+    )
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+
+def repeat_kv(x, n_rep: int):
+    if n_rep == 1:
+        return x
+    b, s, kh, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kh, n_rep, d)).reshape(
+        b, s, kh * n_rep, d
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def make_attention(key, cfg: ModelConfig, dtype):
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = make_dense(ks[0], d, h * dh, dtype, bias=cfg.qkv_bias,
+                                  axes=("embed", "heads"))
+    p["wk"], s["wk"] = make_dense(ks[1], d, kh * dh, dtype, bias=cfg.qkv_bias,
+                                  axes=("embed", "kv_heads"))
+    p["wv"], s["wv"] = make_dense(ks[2], d, kh * dh, dtype, bias=cfg.qkv_bias,
+                                  axes=("embed", "kv_heads"))
+    p["wo"], s["wo"] = make_dense(ks[3], h * dh, d, dtype, axes=("heads", "embed"))
+    return p, s
+
+
+def attention(p, cfg: ModelConfig, x, positions, *, cache=None, mrope_pos=None):
+    """x (B,S,D). cache: None (training/prefill w/o cache) or dict with
+    k/v (B,Smax,KH,Dh) and index for decode; returns (out, new_cache)."""
+    b, sq, _ = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = hint(dense(p["wq"], x).reshape(b, sq, h, dh), cfg, "dp", None, "model", None)
+    k = hint(dense(p["wk"], x).reshape(b, sq, kh, dh), cfg, "dp", None, None, None)
+    v = hint(dense(p["wv"], x).reshape(b, sq, kh, dh), cfg, "dp", None, None, None)
+    if cfg.rope == "mrope" and mrope_pos is not None:
+        half = dh // 2
+        sec = (half - 2 * (half * 3 // 8), half * 3 // 8, half * 3 // 8)
+        q = apply_mrope(q, mrope_pos, cfg.rope_theta, sections=sec)
+        k = apply_mrope(k, mrope_pos, cfg.rope_theta, sections=sec)
+    elif cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        idx = cache["index"]  # tokens already in cache
+        if cfg.kv_dup > 1:  # store duplicated kv heads (clean TP sharding)
+            k = repeat_kv(k, cfg.kv_dup)
+            v = repeat_kv(v, cfg.kv_dup)
+        kh_eff = kh * cfg.kv_dup
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv, "index": idx + sq}
+        kk, vv = ck, cv
+        # decode: mask out beyond idx+sq via causal offset
+        q_offset = idx
+        kfull = repeat_kv(kk.astype(q.dtype), h // kh_eff)
+        vfull = repeat_kv(vv.astype(q.dtype), h // kh_eff)
+        out = _attn_chunked(
+            q, kfull, vfull, causal=True, q_offset=q_offset,
+            chunk_q=min(cfg.attn_chunk_q, sq), chunk_k=cfg.attn_chunk_k,
+        )
+    else:
+        kfull = repeat_kv(k, h // kh)
+        vfull = repeat_kv(v, h // kh)
+        out = _attn_chunked(
+            q, kfull, vfull, causal=cfg.causal, q_offset=0,
+            chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+        )
+    out = hint(out, cfg, "dp", None, "model", None).reshape(b, sq, h * dh)
+    return dense(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def make_mla(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_nope, qk_rope, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["wq_a"], s["wq_a"] = make_dense(ks[0], d, m.q_lora_rank, dtype,
+                                      axes=("embed", "lora"))
+    p["q_norm"], s["q_norm"] = make_norm(m.q_lora_rank, dtype)
+    s["q_norm"] = {"scale": ("lora",)}
+    p["wq_b"], s["wq_b"] = make_dense(
+        ks[1], m.q_lora_rank, h * (qk_nope + qk_rope), dtype, axes=("lora", "heads")
+    )
+    p["wkv_a"], s["wkv_a"] = make_dense(
+        ks[2], d, m.kv_lora_rank + qk_rope, dtype, axes=("embed", "lora")
+    )
+    p["kv_norm"], s["kv_norm"] = make_norm(m.kv_lora_rank, dtype)
+    s["kv_norm"] = {"scale": ("lora",)}
+    p["wkv_b"], s["wkv_b"] = make_dense(
+        ks[3], m.kv_lora_rank, h * (qk_nope + dv), dtype, axes=("lora", "heads")
+    )
+    p["wo"], s["wo"] = make_dense(ks[4], h * dv, d, dtype, axes=("heads", "embed"))
+    return p, s
+
+
+def mla_attention(p, cfg: ModelConfig, x, positions, *, cache=None):
+    """DeepSeek-V3 MLA.  The decode cache stores the *compressed* latent
+    (kv_lora_rank + rope dims per token) — the memory win of MLA."""
+    m = cfg.mla
+    b, sq, _ = x.shape
+    h = cfg.n_heads
+    qk_nope, qk_rope, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x), cfg.norm_eps))
+    q = hint(q.reshape(b, sq, h, qk_nope + qk_rope), cfg, "dp", None, "model", None)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = dense(p["wkv_a"], x)  # (B,S,r+rope)
+    latent, k_rope = kv_a[..., : m.kv_lora_rank], kv_a[..., m.kv_lora_rank :]
+    latent = rmsnorm(p["kv_norm"], latent, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,rope)
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["index"]
+        lat = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent.astype(cache["latent"].dtype), idx, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype), idx, axis=1)
+        new_cache = {"latent": lat, "k_rope": kr, "index": idx + sq}
+        latent_full, k_rope_full = lat.astype(x.dtype), kr[:, :, None].astype(x.dtype)
+        q_offset = idx
+    else:
+        latent_full, k_rope_full = latent, k_rope
+        q_offset = 0
+
+    kv = dense(p["wkv_b"], latent_full).reshape(b, -1, h, qk_nope + dv)
+    k_nope, v = kv[..., :qk_nope], kv[..., qk_nope:]
+    sk = k_nope.shape[1]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_full, (b, sk, h, qk_rope))], -1
+    )
+    k = hint(k, cfg, "dp", None, "model", None)
+    qfull = jnp.concatenate([q_nope, q_rope], -1)
+    # pad v to qk dim for the shared chunked kernel, slice after
+    pad = (qk_nope + qk_rope) - dv
+    vpad = hint(jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))),
+                cfg, "dp", None, "model", None)
+    out = _attn_chunked(
+        qfull, k, vpad, causal=cfg.causal, q_offset=q_offset,
+        chunk_q=min(cfg.attn_chunk_q, sq), chunk_k=cfg.attn_chunk_k,
+    )[..., :dv]
+    out = hint(out, cfg, "dp", None, "model", None).reshape(b, sq, h * dv)
+    return dense(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def make_mlp(key, d, d_ff, act, dtype):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    if act == "swiglu":
+        p["wi"], s["wi"] = make_dense(ks[0], d, d_ff, dtype, axes=("embed", "mlp"))
+        p["wg"], s["wg"] = make_dense(ks[1], d, d_ff, dtype, axes=("embed", "mlp"))
+        p["wo"], s["wo"] = make_dense(ks[2], d_ff, d, dtype, axes=("mlp", "embed"))
+    else:
+        p["wi"], s["wi"] = make_dense(ks[0], d, d_ff, dtype, axes=("embed", "mlp"))
+        p["wo"], s["wo"] = make_dense(ks[2], d_ff, d, dtype, axes=("mlp", "embed"))
+    return p, s
+
+
+def mlp(p, x, act):
+    if act == "swiglu":
+        return dense(p["wo"], jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x))
+    return dense(p["wo"], jax.nn.gelu(dense(p["wi"], x)))

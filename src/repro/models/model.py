@@ -1,0 +1,294 @@
+"""Unified model wrapper: embeddings → (hetero)stacks → head, with init /
+forward / decode-step / cache-init / loss, for every assigned family.
+
+Composition per family
+  dense / vlm       : scan(attn+mlp × L)
+  moe               : scan(attn+mlp × k_dense) ∘ scan(attn+moe × (L−k))
+  ssm               : scan(mamba × L)
+  hybrid (zamba2)   : [scan(mamba × period) ∘ shared-attn]* with one shared
+                      transformer block reused between groups (per-slot
+                      LoRA on its qkv input projection)
+  encoder (hubert)  : scan(bidir attn+mlp × L), frame-class head
+`frontend_stub` families (audio/vlm) accept precomputed (B,S,D) embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ModelConfig, key) -> tuple[Params, dict]:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+    s: dict = {}
+    p["embed"] = (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) *
+                  0.01).astype(dtype)
+    s["embed"] = ("vocab", "embed")
+    if cfg.family == "ssm":
+        p["layers"], s["layers"] = T.make_stack(keys[1], cfg, "mamba",
+                                                cfg.n_layers, dtype)
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid_shared_period or cfg.n_layers
+        n_groups = cfg.n_layers // period
+        p["layers"], s["layers"] = T.make_stack(
+            keys[1], cfg, "mamba", cfg.n_layers, dtype
+        )
+        p["shared"], s["shared"] = T.make_block(keys[2], cfg, "attn_mlp", dtype)
+        # per-invocation LoRA on the shared block's input (zamba2)
+        r = cfg.hybrid_lora_rank or 16
+        p["shared_in"], s["shared_in"] = L.make_dense(
+            keys[3], 2 * cfg.d_model, cfg.d_model, dtype, axes=("mlp", "embed")
+        )
+        p["lora_a"] = (jax.random.normal(keys[4],
+                       (n_groups, 2 * cfg.d_model, r)) * 0.01).astype(dtype)
+        p["lora_b"] = jnp.zeros((n_groups, r, cfg.d_model), dtype)
+        s["lora_a"] = ("layers", "mlp", None)
+        s["lora_b"] = ("layers", None, "embed")
+    elif cfg.moe is not None:
+        kd = cfg.moe.first_k_dense
+        if kd:
+            p["dense_layers"], s["dense_layers"] = T.make_stack(
+                keys[1], cfg, "attn_mlp", kd, dtype
+            )
+        p["layers"], s["layers"] = T.make_stack(
+            keys[2], cfg, "attn_moe", cfg.n_layers - kd, dtype
+        )
+    else:
+        p["layers"], s["layers"] = T.make_stack(
+            keys[1], cfg, "attn_mlp", cfg.n_layers, dtype
+        )
+    p["ln_f"], s["ln_f"] = L.make_norm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(keys[5],
+                        (cfg.d_model, cfg.vocab)) * 0.01).astype(dtype)
+        s["unembed"] = ("embed", "vocab")
+    if cfg.mtp:  # deepseek multi-token prediction: one extra block + proj
+        p["mtp_block"], s["mtp_block"] = T.make_block(keys[6], cfg, "attn_mlp", dtype)
+        p["mtp_proj"], s["mtp_proj"] = L.make_dense(
+            keys[7], 2 * cfg.d_model, cfg.d_model, dtype, axes=("mlp", "embed")
+        )
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(p, cfg, tokens_or_embeds):
+    if cfg.frontend_stub and tokens_or_embeds.ndim == 3:
+        return tokens_or_embeds.astype(_dtype(cfg))  # precomputed embeddings
+    return jnp.take(p["embed"], tokens_or_embeds, axis=0)
+
+
+def _head(p, cfg, x):
+    x = L.rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    return L.hint(x @ w, cfg, "dp", None, "model")  # (B,S,V) vocab-sharded
+
+
+def _hybrid_stacks(p, cfg, x, positions, caches, dispatch):
+    period = cfg.hybrid_shared_period or cfg.n_layers
+    n_groups = cfg.n_layers // period
+    x0 = x
+    aux = jnp.float32(0.0)
+    new_m_caches, new_a_caches = [], []
+    m_caches, a_caches = (caches or (None, None))
+    for gidx in range(n_groups):
+        sl = (lambda t: jax.tree.map(
+            lambda a: a[gidx * period:(gidx + 1) * period], t))
+        grp_cache = None if m_caches is None else sl(m_caches)
+        x, nc, a = T.apply_stack(sl(p["layers"]), cfg, "mamba", x, positions,
+                                 caches=grp_cache, dispatch=dispatch)
+        aux += a
+        new_m_caches.append(nc)
+        # shared attention block on concat(hidden, initial embedding);
+        # rematerialized — 9 unremat'd full-attention blocks would
+        # otherwise dominate activation memory (observed +13 GB/device)
+        a_cache = None if a_caches is None else jax.tree.map(
+            lambda a: a[gidx], a_caches)
+
+        def shared_fn(xx, x00, pp, cache):
+            cat = jnp.concatenate([xx, x00], axis=-1)
+            lora = (cat @ pp["lora_a"]) @ pp["lora_b"]
+            h = L.dense(pp["shared_in"], cat) + lora
+            return T.apply_block(pp["shared"], cfg, "attn_mlp", h, positions,
+                                 cache=cache)
+
+        if cfg.remat:
+            shared_fn = jax.checkpoint(shared_fn)
+        h, na, a2 = shared_fn(
+            x, x0,
+            {"shared": p["shared"], "shared_in": p["shared_in"],
+             "lora_a": p["lora_a"][gidx], "lora_b": p["lora_b"][gidx]},
+            a_cache)
+        x = x + h
+        new_a_caches.append(na)
+        aux += a2
+    cat_m = (jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_m_caches)
+             if new_m_caches[0] is not None else None)
+    cat_a = (jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_a_caches)
+             if new_a_caches[0] is not None else None)
+    return x, (cat_m, cat_a), aux
+
+
+def forward(p, cfg: ModelConfig, tokens, *, positions=None, caches=None,
+            mrope_pos=None, dispatch=None):
+    """tokens (B,S) int32 or (B,S,D) embeddings (frontend_stub).
+    Returns (logits, new_caches, aux_loss)."""
+    x = L.hint(_embed_in(p, cfg, tokens), cfg, "dp", "sp", None)
+    b, sq = x.shape[:2]
+    if positions is None:
+        start = 0 if caches is None else _cache_index(cfg, caches)
+        positions = start + jnp.arange(sq, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, (b, sq))
+    if cfg.family == "hybrid":
+        x, new_caches, aux = _hybrid_stacks(p, cfg, x, positions, caches, dispatch)
+    elif cfg.moe is not None and cfg.moe.first_k_dense:
+        kd = cfg.moe.first_k_dense
+        dc, mc = (None, None) if caches is None else caches
+        x, ndc, a1 = T.apply_stack(p["dense_layers"], cfg, "attn_mlp", x,
+                                   positions, caches=dc, mrope_pos=mrope_pos)
+        x, nmc, a2 = T.apply_stack(p["layers"], cfg, "attn_moe", x, positions,
+                                   caches=mc, dispatch=dispatch)
+        new_caches, aux = (ndc, nmc), a1 + a2
+    else:
+        kind = ("mamba" if cfg.family == "ssm"
+                else "attn_moe" if cfg.moe is not None else "attn_mlp")
+        x, new_caches, aux = T.apply_stack(
+            p["layers"], cfg, kind, x, positions, caches=caches,
+            mrope_pos=mrope_pos, dispatch=dispatch,
+        )
+    logits = _head(p, cfg, x)
+    return logits, new_caches, aux
+
+
+def _cache_index(cfg, caches):
+    leaves = [x for x in jax.tree.leaves(caches) if x.ndim == 1]
+    # index leaves are stacked (L,) int32; take layer 0
+    idxs = [x for x in jax.tree.leaves(caches)
+            if jnp.issubdtype(x.dtype, jnp.integer) and x.ndim <= 1]
+    if idxs:
+        v = idxs[0]
+        return v[0] if v.ndim else v
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode-state pytree per family, stacked over layers."""
+    def attn_cache(n):
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {
+                "latent": jnp.zeros((n, batch, max_len, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((n, batch, max_len, m.qk_rope_head_dim), dtype),
+                "index": jnp.zeros((n,), jnp.int32),
+            }
+        kh = cfg.n_kv_heads * cfg.kv_dup
+        return {
+            "k": jnp.zeros((n, batch, max_len, kh, cfg.d_head), dtype),
+            "v": jnp.zeros((n, batch, max_len, kh, cfg.d_head), dtype),
+            "index": jnp.zeros((n,), jnp.int32),
+        }
+
+    def mamba_cache(n):
+        s = cfg.ssm
+        conv_dim = cfg.d_inner_ssm + 2 * s.n_groups * s.d_state
+        return {
+            "conv": jnp.zeros((n, batch, s.d_conv - 1, conv_dim), dtype),
+            "ssm": jnp.zeros(
+                (n, batch, cfg.n_ssm_heads, s.head_dim, s.d_state), jnp.float32
+            ),
+        }
+
+    if cfg.family == "ssm":
+        return mamba_cache(cfg.n_layers)
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_shared_period or cfg.n_layers
+        n_groups = cfg.n_layers // period
+        return (mamba_cache(cfg.n_layers), attn_cache(n_groups))
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        return (attn_cache(cfg.moe.first_k_dense),
+                attn_cache(cfg.n_layers - cfg.moe.first_k_dense))
+    return attn_cache(cfg.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# losses / steps (model-level; the distributed wrappers live in launch/)
+# ---------------------------------------------------------------------------
+
+
+def _masked_ce(logits, labels):
+    """Shard-friendly masked cross-entropy.
+
+    Uses a one-hot contraction instead of take_along_axis so vocab-sharded
+    logits stay sharded (no (B,S,V) all-gather — 40 GB/device for a 152k
+    vocab at 64k tokens/device); logsumexp reduces with a tiny all-reduce.
+    """
+    v = logits.shape[-1]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(safe, v, dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_loss(p, cfg: ModelConfig, tokens, labels, *, mrope_pos=None,
+            dispatch=None, aux_weight=0.01, mtp_weight=0.3):
+    logits, _, aux = forward(p, cfg, tokens, mrope_pos=mrope_pos,
+                             dispatch=dispatch)
+    loss = _masked_ce(logits, labels)
+    total = loss + aux_weight * aux
+    if cfg.mtp:
+        total = total + mtp_weight * _mtp_loss(p, cfg, tokens, labels)
+    return total, {"nll": loss, "aux": aux}
+
+
+def _mtp_loss(p, cfg, tokens, labels):
+    """DeepSeek-V3 MTP: predict t+2 from (h_t, emb(t+1)) through one extra
+    block.  Approximated with the embedding stream as h (cheap but wired
+    end-to-end so the head trains and shards)."""
+    emb = jnp.take(p["embed"], tokens, axis=0)
+    nxt = jnp.roll(emb, -1, axis=1)
+    h = L.dense(p["mtp_proj"], jnp.concatenate([emb, nxt], axis=-1))
+    b, sq = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32)[None], (b, sq))
+    h, _, _ = T.apply_block(p["mtp_block"], cfg, "attn_mlp", h, positions)
+    logits = _head(p, cfg, h)
+    lab2 = jnp.roll(labels, -1, axis=1)
+    lab2 = lab2.at[:, -2:].set(-1)  # no target beyond the sequence end
+    return _masked_ce(logits, lab2)
+
+
+def decode_step(p, cfg: ModelConfig, token, caches, *, mrope_pos=None):
+    """One-token decode: token (B,1) → (logits (B,1,V), new caches)."""
+    logits, new_caches, _ = forward(p, cfg, token, caches=caches,
+                                    mrope_pos=mrope_pos)
+    return logits, new_caches

@@ -1,0 +1,172 @@
+"""Mamba2 — state-space duality (SSD) blocks, chunked scan + decode step.
+
+The SSD algorithm is itself a *segmented* computation: the sequence is cut
+into chunks; within a chunk the output is a (masked, decay-weighted)
+matmul; across chunks a small recurrent state is scanned.  Structurally it
+is the same blocked scan-with-carry the paper's run generation uses — one
+more place the framework's segmented primitives pay off.
+
+Shapes follow the Mamba2 reference: d_inner = expand·d_model, heads of
+size head_dim, state size N per head, grouped B/C (n_groups).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import make_dense, dense, rmsnorm, make_norm, hint
+
+
+def make_mamba2(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    nh = cfg.n_ssm_heads
+    g, n = s.n_groups, s.d_state
+    ks = jax.random.split(key, 6)
+    p, sp = {}, {}
+    d_in_proj = 2 * di + 2 * g * n + nh  # z, x, B, C, dt
+    p["in_proj"], sp["in_proj"] = make_dense(ks[0], d, d_in_proj, dtype,
+                                             axes=("embed", "inner"))
+    p["out_proj"], sp["out_proj"] = make_dense(ks[1], di, d, dtype,
+                                               axes=("inner", "embed"))
+    conv_dim = di + 2 * g * n
+    p["conv_w"] = (jax.random.normal(ks[2], (s.d_conv, conv_dim)) /
+                   math.sqrt(s.d_conv)).astype(dtype)
+    sp["conv_w"] = (None, "inner")
+    p["conv_b"] = jnp.zeros((conv_dim,), dtype)
+    sp["conv_b"] = ("inner",)
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32)
+    sp["A_log"] = ("inner",)
+    p["D"] = jnp.ones((nh,), jnp.float32)
+    sp["D"] = ("inner",)
+    p["dt_bias"] = jnp.zeros((nh,), jnp.float32)
+    sp["dt_bias"] = ("inner",)
+    p["norm"], sp["norm"] = make_norm(di, dtype)
+    sp["norm"] = {"scale": ("inner",)}
+    return p, sp
+
+
+def _causal_conv(x, w, b):
+    """x (B,S,C), w (K,C): depthwise causal conv via shifted adds."""
+    k = w.shape[0]
+    y = x * w[-1]
+    for i in range(1, k):
+        y = y + jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]] * w[-1 - i]
+    return y + b
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int, ssm_state=None):
+    """SSD (Mamba2 alg. via block decomposition).
+
+    x (b,l,h,p); dt (b,l,h) (already softplus'd); A (h,) (negative);
+    B, C (b,l,g,n).  Returns y (b,l,h,p) and final state (b,h,p,n).
+    """
+    b, l, h, pdim = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0
+    nc = l // chunk
+    rep = h // g
+    # broadcast groups to heads
+    Bh = jnp.repeat(B, rep, axis=2)  # (b,l,h,n)
+    Ch = jnp.repeat(C, rep, axis=2)
+    xc = x.reshape(b, nc, chunk, h, pdim).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    Bc = Bh.reshape(b, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+    Cc = Ch.reshape(b, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    # scan over chunks with the (b,h,p,n) state as carry: peak memory is
+    # ONE chunk's (c×c) decay matrix, not all nc of them — the same
+    # carry-and-emit structure as the paper's run generation.
+    def chunk_step(state, inp):
+        xz, dz, Bz, Cz = inp  # (b,c,h,p) (b,c,h) (b,c,h,n) (b,c,h,n)
+        dA = dz * A[None, None, :]
+        dA_cum = jnp.cumsum(dA, axis=1)  # (b,c,h)
+        # intra-chunk: L[i,j] = exp(cum_i − cum_j) for i ≥ j.  Mask BEFORE
+        # exp: masking after produces inf·0 = NaN in the backward pass.
+        seg = dA_cum[:, :, None, :] - dA_cum[:, None, :, :]  # (b,c,c,h)
+        seg = jnp.where(causal[None, :, :, None], seg, -jnp.inf)
+        Lmat = jnp.exp(seg)
+        scores = jnp.einsum("bihn,bjhn->bijh", Cz, Bz)
+        y_diag = jnp.einsum("bijh,bijh,bjh,bjhp->bihp", scores, Lmat, dz, xz)
+        # entering-state contribution
+        state_decay = jnp.exp(dA_cum)  # (b,c,h)
+        y_off = jnp.einsum("bchn,bch,bhpn->bchp", Cz, state_decay, state)
+        # carry update
+        decay_to_end = jnp.exp(dA_cum[:, -1:, :] - dA_cum)
+        contrib = jnp.einsum("bchn,bch,bch,bchp->bhpn", Bz, decay_to_end, dz, xz)
+        chunk_decay = jnp.exp(dA_cum[:, -1, :])  # (b,h)
+        new_state = state * chunk_decay[:, :, None, None] + contrib
+        return new_state, (y_diag + y_off).astype(x.dtype)
+
+    init = (jnp.zeros((b, h, pdim, n), jnp.float32) if ssm_state is None
+            else ssm_state.astype(jnp.float32))
+    final, yc = jax.lax.scan(
+        chunk_step, init,
+        (xc.astype(jnp.float32), dtc, Bc.astype(jnp.float32),
+         Cc.astype(jnp.float32)),
+    )
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, l, h, pdim)
+    return y, final
+
+
+def mamba2_block(p, cfg: ModelConfig, x, *, cache=None):
+    """x (B,S,D) → (B,S,D); cache = {'conv': (B,K-1,convdim), 'ssm':
+    (B,h,p,n)} for single-token decode."""
+    s = cfg.ssm
+    b, l, d = x.shape
+    di, nh, g, n = cfg.d_inner_ssm, cfg.n_ssm_heads, s.n_groups, s.d_state
+    pdim = s.head_dim
+    zxbcdt = hint(dense(p["in_proj"], x), cfg, "dp", None, "model")
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,l,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+
+    new_cache = None
+    prefill = cache is not None and l > 1
+    if cache is None or prefill:
+        raw_xbc = xbc
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    else:
+        # decode: l == 1; maintain a rolling conv window
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (b,K,cd)
+        xbc = (window * p["conv_w"][None]).sum(1, keepdims=True) + p["conv_b"]
+        new_conv = window[:, 1:]
+    xbc = jax.nn.silu(xbc)
+    xin, B, C = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xin = xin.reshape(b, l, nh, pdim)
+    B = B.reshape(b, l, g, n)
+    C = C.reshape(b, l, g, n)
+
+    if cache is None or prefill:
+        chunk = min(s.chunk, l)
+        assert l % chunk == 0
+        y, final = _ssd_chunked(xin, dt, A, B, C, chunk,
+                                ssm_state=cache["ssm"] if prefill else None)
+        if prefill:  # cache the conv tail (raw pre-activation inputs)
+            new_cache = {
+                "conv": raw_xbc[:, -(s.d_conv - 1):].astype(cache["conv"].dtype),
+                "ssm": final.astype(cache["ssm"].dtype),
+            }
+    else:
+        # single-step recurrence: state ← state·exp(A·dt) + dt·B⊗x
+        st = cache["ssm"].astype(jnp.float32)  # (b,nh,p,n)
+        dt1 = dt[:, 0]  # (b,nh)
+        dA = jnp.exp(dt1 * A[None, :])  # (b,nh)
+        rep = nh // g
+        B1 = jnp.repeat(B[:, 0], rep, axis=1)  # (b,nh,n)
+        C1 = jnp.repeat(C[:, 0], rep, axis=1)
+        x1 = xin[:, 0].astype(jnp.float32)  # (b,nh,p)
+        st = st * dA[:, :, None, None] + (
+            dt1[:, :, None, None] * x1[..., None] * B1[:, :, None, :]
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", st, C1)[:, None].astype(x.dtype)
+        new_cache = {"conv": new_conv, "ssm": st.astype(cache["ssm"].dtype)}
+    y = y.reshape(b, l, di) + (p["D"][None, None, :, None] *
+                               xin.astype(jnp.float32)).astype(x.dtype).reshape(b, l, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(p["out_proj"], y), new_cache

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    adamw,
+    adafactor,
+    OptState,
+    make_optimizer,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+from repro.optim import compression

@@ -1,0 +1,150 @@
+"""Optimizers built from scratch (no optax in this environment).
+
+* ``adamw``     — the default.
+* ``adafactor`` — factored second moment; the memory plan for the 671B
+  model (params+grads+factored-V ≈ 10.5 GB/chip on a v5e-256, where Adam's
+  fp32 moments alone would need 21 GB/chip).
+
+Both are pytree-polymorphic and pjit-transparent: optimizer state inherits
+parameter shardings leaf-by-leaf (fully sharded optimizer = ZeRO-style for
+FSDP-sharded params).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any  # first moment (adamw) or factored rows (adafactor)
+    v: Any  # second moment (adamw) or factored cols (adafactor)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          moment_dtype=jnp.float32):
+    lr_fn = lr if callable(lr) else (lambda s: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(zeros, params), jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = b1 * m32 + (1 - b1) * g
+            v_new = b2 * v32 + (1 - b2) * g * g
+            mh, vh = m_new / bc1, v_new / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * delta).astype(p.dtype),
+                    m_new.astype(moment_dtype), v_new.astype(moment_dtype))
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, OptState(step, new_m, new_v)
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment by default)
+# ---------------------------------------------------------------------------
+
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0):
+    lr_fn = lr if callable(lr) else (lambda s: lr)
+
+    def init(params):
+        def rows(p):
+            if p.ndim < 2:
+                return jnp.zeros(p.shape, jnp.float32)
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+
+        def cols(p):
+            if p.ndim < 2:
+                return jnp.zeros((1,), jnp.float32)
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(rows, params), jax.tree.map(cols, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim < 2:
+                vr_new = beta * vr + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(vr_new)
+                vc_new = vc
+            else:
+                vr_new = beta * vr + (1 - beta) * g2.mean(-1)
+                vc_new = beta * vc + (1 - beta) * g2.mean(-2)
+                denom = vr_new[..., None] * vc_new[..., None, :]
+                denom = denom / jnp.maximum(
+                    vr_new.mean(-1)[..., None, None], eps
+                )
+                u = g * jax.lax.rsqrt(denom + eps)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            delta = u + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * delta).astype(p.dtype),
+                    vr_new, vc_new)
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, OptState(step, new_m, new_v)
+
+    return init, update
+
+
+def make_optimizer(name: str, lr, **kw):
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(name)

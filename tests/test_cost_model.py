@@ -1,0 +1,158 @@
+"""The analytic cost model must reproduce the paper's worked examples and
+match the executable implementation's exact accounting (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ExecConfig, hash_aggregate, insort_aggregate
+from repro.core import cost_model as cm
+
+
+# ---------------------------------------------------------------------------
+# paper worked examples (§4.1, §4.2, §4.5)
+# ---------------------------------------------------------------------------
+
+
+def test_example3_hash():
+    """Ex 3: I=750k, M=1k, F=6, O=32k → hash spill 1,500,000 (2 levels)."""
+    b = cm.simulate_hash(750_000, 32_000, 1_000, 6, hybrid=False)
+    assert b.total_spill == 1_500_000
+    assert b.merge_levels == 2
+
+
+def test_example3_traditional_sort():
+    """Ex 3 traditional: paper computes 1,884,000 (with I≈run-gen spill)."""
+    b = cm.simulate_insort(
+        750_000, 32_000, 1_000, 6,
+        early_aggregation=True, wide_merge=False, replacement_selection=True,
+    )
+    assert b.total_spill == pytest.approx(1_884_000, rel=0.03)
+    # the paper's level structure: full level, full level, one partial step
+    assert b.merge_steps[-1] == 32_000  # penultimate step writes one run of O
+
+
+def test_example3_wide_merge():
+    """Ex 3 wide merging: spill 1,500,000 — perfectly competitive (§4.1)."""
+    b = cm.simulate_insort(
+        750_000, 32_000, 1_000, 6,
+        early_aggregation=True, wide_merge=True, replacement_selection=True,
+    )
+    assert b.total_spill == pytest.approx(1_500_000, rel=0.03)
+    assert b.merge_levels == cm.merge_levels_insort(32_000, 1_000, 6) == 2
+
+
+def test_example4():
+    """Ex 4: I=100M, M=100k, F=100, O=8M."""
+    hash_ = cm.simulate_hash(100e6, 8e6, 100e3, 100)
+    assert hash_.total_spill == pytest.approx(100e6, rel=0.02)
+    assert hash_.merge_levels == 1
+    trad = cm.simulate_insort(
+        100e6, 8e6, 100e3, 100,
+        early_aggregation=True, wide_merge=False, replacement_selection=True,
+    )
+    assert trad.total_spill == pytest.approx(133e6, rel=0.03)
+    wide = cm.simulate_insort(
+        100e6, 8e6, 100e3, 100,
+        early_aggregation=True, wide_merge=True, replacement_selection=True,
+    )
+    assert wide.total_spill == pytest.approx(100e6, rel=0.02)
+    assert wide.merge_levels == 1  # single wide merge of ~500 runs
+
+
+def test_example5_parity():
+    """Ex 5 (O=1.5·M): early agg + wide merge ⇒ parity with hybrid hash.
+
+    (The paper's prose says "about half" absorbed; its own §3.5 model gives
+    M/O = 2/3 absorbed.  Both algorithms match either way — the parity is
+    the claim, and parity is exact here.)"""
+    ins = cm.simulate_insort(
+        100e6, 150e3, 100e3, 100,
+        early_aggregation=True, wide_merge=True, replacement_selection=True,
+    )
+    hsh = cm.simulate_hash(100e6, 150e3, 100e3, 100)
+    assert ins.total_spill == pytest.approx(hsh.total_spill, rel=0.01)
+    assert ins.merge_levels == 1
+
+
+def test_fig7_spill_model():
+    """Fig 7: I=1M, M=100k; O=M ⇒ no spill; O≫M ⇒ nearly all spill."""
+    none = cm.early_agg_run_gen(1_000_000, 100_000, 100_000)[0]
+    assert none == 0.0
+    lots = cm.early_agg_run_gen(1_000_000, 3_200_000, 100_000)[0]
+    assert lots > 0.96 * 1_000_000 * (1 - 100_000 / 3_200_000)
+
+
+def test_merge_depth_is_output_driven():
+    """§4.3: depth ceil(log_F(O/M)) versus traditional ceil(log_F(I/M))."""
+    assert cm.merge_levels_insort(32_000, 1_000, 6) == 2
+    assert cm.merge_levels_insort(8e6, 1e5, 100) == 1
+    assert cm.merge_levels_traditional(750_000, 1_000, 6) == 4
+    assert cm.merge_levels_insort(100, 1_000, 6) == 0
+
+
+def test_fig24_gap_disappears():
+    """Fig 23 → 24: the sort-vs-hash gap practically disappears."""
+    red, early3, hash_, insort = cm.fig24_curves()
+    early3, hash_, insort = map(np.asarray, (early3, hash_, insort))
+    # new algorithm within 15% of hash everywhere …
+    assert np.all(insort <= 1.15 * hash_ + 2 * 100e3)
+    # … while the old sort-based algorithm is far worse somewhere
+    assert np.any(early3 > 1.5 * hash_)
+
+
+# ---------------------------------------------------------------------------
+# property: executable accounting obeys the analytic model
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(4_000, 24_000),
+    o=st.integers(10, 6_000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_accounting_matches_model(n, o, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, o, n).astype(np.uint32)
+    o_true = len(np.unique(keys))
+    cfg = ExecConfig(memory_rows=512, page_rows=64, fanin=4, batch_rows=128)
+    _, meas = insort_aggregate(keys, None, cfg, output_estimate=o_true)
+    model = cm.simulate_insort(
+        n, o_true, cfg.memory_rows, cfg.fanin,
+        early_aggregation=True, wide_merge=True,
+    )
+    if o_true <= cfg.memory_rows:
+        assert meas.total_spill_rows == 0
+        return
+    # run generation can spill at most the input (+ one memory load);
+    # each pre-wide merge level rewrites at most its own input (merging
+    # with aggregation never grows data), and the input of level 1 is the
+    # run-generation spill.
+    assert meas.rows_spilled_run_generation <= n + cfg.memory_rows
+    assert meas.rows_spilled_merge <= max(0, meas.merge_levels - 1) * (
+        meas.rows_spilled_run_generation
+    )
+    assert meas.total_spill_rows >= 0.5 * model.total_spill
+    assert meas.total_spill_rows <= 2.0 * model.total_spill + cfg.memory_rows
+    # wide merge adds no merge spill; depth is output-driven
+    assert meas.rows_spilled_merge == 0 or meas.merge_levels > 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(4_000, 20_000),
+    o=st.integers(600, 5_000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_insort_vs_hash_parity_property(n, o, seed):
+    """The headline claim, property-tested: spill parity within RSW slack."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, o, n).astype(np.uint32)
+    o_true = len(np.unique(keys))
+    cfg = ExecConfig(memory_rows=512, page_rows=64, fanin=4, batch_rows=128)
+    _, si = insort_aggregate(keys, None, cfg, output_estimate=o_true)
+    _, sh = hash_aggregate(keys, None, cfg, output_estimate=o_true)
+    # replacement-selection keeps in-sort within ~2× of hybrid hashing
+    # everywhere (paper Fig 3: "slightly worse for small outputs"), versus
+    # the ≥(log_F(I/M))× of traditional sorting.
+    assert si.total_spill_rows <= 2.0 * sh.total_spill_rows + 2 * cfg.memory_rows

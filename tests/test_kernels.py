@@ -1,0 +1,240 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs the
+pure-jnp oracles in repro/kernels/ref.py.  Kernels run in interpret mode
+(CPU container); the pallas_call/BlockSpec structure is the TPU target.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.types import EMPTY, AggState
+from repro.core import sorted_ops
+from repro.core.types import rows_to_state
+from repro.kernels import ops, ref
+from repro.kernels.bitonic_sort import bitonic_sort, bitonic_sort_kv
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.merge_aggregate import merge_absorb_tiles
+from repro.kernels.segmented_reduce import segmented_scan_tiles
+
+RNG = np.random.default_rng(123)
+
+
+# ---------------------------------------------------------------------------
+# bitonic sort
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t", [1, 3])
+@pytest.mark.parametrize("n", [2, 8, 128, 1024, 4096])
+def test_bitonic_sort_shapes(t, n):
+    k = RNG.integers(0, 2**32 - 1, size=(t, n)).astype(np.uint32)
+    got = bitonic_sort(jnp.asarray(k))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.ref_sort(k)))
+
+
+@pytest.mark.parametrize("domain", [2, 100, 2**31])
+def test_bitonic_sort_duplicates(domain):
+    k = RNG.integers(0, domain, size=(2, 512)).astype(np.uint32)
+    got = bitonic_sort(jnp.asarray(k))
+    np.testing.assert_array_equal(np.asarray(got), np.sort(k, axis=-1))
+
+
+def test_bitonic_sort_with_empty_sentinels():
+    k = RNG.integers(0, 1000, size=(1, 256)).astype(np.uint32)
+    k[0, 17:93] = EMPTY
+    got = np.asarray(bitonic_sort(jnp.asarray(k)))[0]
+    np.testing.assert_array_equal(got, np.sort(k[0]))
+    assert np.all(got[-76:] == EMPTY)  # sentinels sink to the tail
+
+
+def test_bitonic_kv_payload_follows_key():
+    n = 2048
+    k = RNG.integers(0, 2**32 - 1, size=(1, n)).astype(np.uint32)
+    v = np.arange(n, dtype=np.uint32)[None]
+    sk, sv = bitonic_sort_kv(jnp.asarray(k), jnp.asarray(v))
+    sk, sv = np.asarray(sk)[0], np.asarray(sv)[0]
+    np.testing.assert_array_equal(k[0][sv], sk)  # payload is a permutation
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    logn=st.integers(1, 11),
+    domain=st.sampled_from([1, 7, 1000, 2**31]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitonic_sort_property(logn, domain, seed):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(0, domain, size=(1, 2**logn)).astype(np.uint32)
+    got = bitonic_sort(jnp.asarray(k))
+    np.testing.assert_array_equal(np.asarray(got)[0], np.sort(k[0]))
+
+
+def test_ops_argsort_u32_non_pow2():
+    for n in (5, 100, 1000, 1537):
+        k = RNG.integers(0, 500, size=(n,)).astype(np.uint32)
+        perm = np.asarray(ops.argsort_u32(jnp.asarray(k)))
+        np.testing.assert_array_equal(k[perm], np.sort(k))
+
+
+# ---------------------------------------------------------------------------
+# segmented reduce
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 128, 512, 2048])
+@pytest.mark.parametrize("v", [1, 3])
+def test_segmented_scan_vs_ref(n, v):
+    keys = np.sort(RNG.integers(0, max(2, n // 8), size=(2, n)).astype(np.uint32), -1)
+    cnt = RNG.integers(1, 5, size=(2, n)).astype(np.int32)
+    val = RNG.normal(size=(2, v, n)).astype(np.float32)
+    got = segmented_scan_tiles(
+        jnp.asarray(keys), jnp.asarray(cnt), jnp.asarray(val),
+        jnp.asarray(val), jnp.asarray(val),
+    )
+    want = ref.ref_segmented_scan(
+        jnp.asarray(keys), jnp.asarray(cnt), jnp.asarray(val),
+        jnp.asarray(val), jnp.asarray(val),
+    )
+    names = ["count", "sum", "min", "max", "tails"]
+    for g, w, name in zip(got, want, names):
+        if name in ("count", "tails"):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+        else:
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-5, err_msg=name
+            )
+
+
+def test_segmented_scan_with_empty_tail():
+    n = 256
+    keys = np.sort(RNG.integers(0, 30, size=(1, n)).astype(np.uint32), -1)
+    keys[0, 200:] = EMPTY
+    cnt = np.ones((1, n), np.int32)
+    val = np.ones((1, 1, n), np.float32)
+    c, s, mn, mx, tails = segmented_scan_tiles(
+        jnp.asarray(keys), jnp.asarray(cnt), jnp.asarray(val),
+        jnp.asarray(val), jnp.asarray(val),
+    )
+    tails = np.asarray(tails)[0]
+    assert not tails[200:].any()  # EMPTY rows are never segment tails
+    # group total at each tail equals true group size
+    for i in np.where(tails)[0]:
+        assert int(np.asarray(c)[0, i]) == int((keys[0] == keys[0, i]).sum())
+
+
+def test_ops_segmented_combine_matches_xla_backend():
+    """The pallas path must agree with core.sorted_ops (the XLA oracle)."""
+    for n, width in [(100, 0), (500, 2), (1024, 1)]:
+        keys = np.sort(RNG.integers(0, 64, size=(n,)).astype(np.uint32))
+        pay = None if width == 0 else RNG.normal(size=(n, width)).astype(np.float32)
+        state = rows_to_state(jnp.asarray(keys), None if pay is None else jnp.asarray(pay))
+        want = sorted_ops.segmented_combine(state)
+        got = ops.segmented_combine(state)
+        np.testing.assert_array_equal(np.asarray(got.keys), np.asarray(want.keys))
+        np.testing.assert_array_equal(np.asarray(got.count), np.asarray(want.count))
+        np.testing.assert_allclose(
+            np.asarray(got.sum), np.asarray(want.sum), rtol=1e-4, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# fused merge-aggregate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [64, 256, 1024])
+def test_merge_aggregate_vs_ref(n):
+    def mk(nn):
+        k = np.sort(RNG.integers(0, nn // 2, size=(1, nn)).astype(np.uint32), -1)
+        c = np.ones((1, nn), np.int32)
+        v = RNG.normal(size=(1, 2, nn)).astype(np.float32)
+        return k, c, v
+
+    ka, ca, va = mk(n)
+    kb, cb, vb = mk(n)
+    args = [jnp.asarray(x) for x in (ka, ca, va, va, va, kb, cb, vb, vb, vb)]
+    got = merge_absorb_tiles(*args)
+    want = ref.ref_merge_absorb(*args)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))  # keys
+    np.testing.assert_array_equal(np.asarray(got[5]), np.asarray(want[5]))  # tails
+    tails = np.asarray(got[5])
+    for g, w in zip(got[1:5], want[1:5]):
+        np.testing.assert_allclose(  # compare where it matters: at tails
+            np.asarray(g)[..., tails[0]], np.asarray(w)[..., tails[0]],
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+def test_ops_merge_absorb_sorted_end_to_end():
+    ka = np.sort(RNG.integers(0, 300, 700).astype(np.uint32))
+    kb = np.sort(RNG.integers(100, 400, 500).astype(np.uint32))
+    pa = RNG.normal(size=(700, 2)).astype(np.float32)
+    pb = RNG.normal(size=(500, 2)).astype(np.float32)
+    a = sorted_ops.absorb(rows_to_state(jnp.asarray(ka), jnp.asarray(pa)))
+    b = sorted_ops.absorb(rows_to_state(jnp.asarray(kb), jnp.asarray(pb)))
+    got = ops.merge_absorb_sorted(a, b)
+    want = sorted_ops.merge_absorb(a, b)
+    gk = np.asarray(got.keys); gk = gk[gk != EMPTY]
+    wk = np.asarray(want.keys); wk = wk[wk != EMPTY]
+    np.testing.assert_array_equal(gk, wk)
+    gv, wv = np.asarray(got.count), np.asarray(want.count)
+    np.testing.assert_array_equal(gv[: len(gk)], wv[: len(wk)])
+    np.testing.assert_allclose(
+        np.asarray(got.sum)[: len(gk)], np.asarray(want.sum)[: len(wk)],
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("e,c,d,f", [(2, 128, 128, 128), (4, 256, 256, 384),
+                                     (8, 128, 512, 256)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_grouped_matmul_vs_ref(e, c, d, f, dtype):
+    x = RNG.normal(size=(e * c, d)).astype(np.float32)
+    w = RNG.normal(size=(e, d, f)).astype(np.float32) / np.sqrt(d)
+    xj = jnp.asarray(x, dtype=dtype)
+    wj = jnp.asarray(w, dtype=dtype)
+    got = grouped_matmul(xj, wj, capacity=c)
+    want = ref.ref_grouped_matmul(xj, wj, capacity=c)
+    tol = 1e-4 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_grouped_matmul_block_shape_sweep():
+    e, c, d, f = 2, 256, 256, 256
+    x = RNG.normal(size=(e * c, d)).astype(np.float32)
+    w = RNG.normal(size=(e, d, f)).astype(np.float32)
+    want = np.asarray(ref.ref_grouped_matmul(jnp.asarray(x), jnp.asarray(w), capacity=c))
+    for bm, bn, bk in [(128, 128, 128), (256, 128, 128), (128, 256, 256)]:
+        got = grouped_matmul(
+            jnp.asarray(x), jnp.asarray(w), capacity=c,
+            block_m=bm, block_n=bn, block_k=bk,
+        )
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pallas backend plumbed through the paper operator
+# ---------------------------------------------------------------------------
+
+
+def test_sorted_groupby_pallas_backend():
+    keys = RNG.integers(0, 200, 1000).astype(np.uint32)
+    pay = RNG.normal(size=(1000, 2)).astype(np.float32)
+    want = sorted_ops.sorted_groupby(jnp.asarray(keys), jnp.asarray(pay))
+    got = sorted_ops.sorted_groupby(
+        jnp.asarray(keys), jnp.asarray(pay), backend="pallas"
+    )
+    np.testing.assert_array_equal(np.asarray(got.keys), np.asarray(want.keys))
+    np.testing.assert_array_equal(np.asarray(got.count), np.asarray(want.count))
+    np.testing.assert_allclose(
+        np.asarray(got.sum), np.asarray(want.sum), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,163 @@
+"""Substrate tests: optimizers, checkpoint/resume, data pipeline."""
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.core import ExecConfig
+from repro.data import DataLoader, SyntheticCorpus, dedup_examples, pack_by_length
+from repro.optim import adafactor, adamw, clip_by_global_norm, cosine_schedule
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def _quadratic_losses(opt_init, opt_update, steps=60):
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)))
+    params = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}
+    state = opt_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["b"] ** 2)
+
+    out = []
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = opt_update(g, state, params)
+        out.append(float(loss(params)))
+    return out
+
+
+def test_adamw_converges():
+    init, update = adamw(lr=0.05, weight_decay=0.0)
+    losses = _quadratic_losses(init, update)
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_adafactor_converges():
+    init, update = adafactor(lr=0.3)
+    losses = _quadratic_losses(init, update)
+    assert losses[-1] < 0.2 * losses[0]
+
+
+def test_adafactor_state_is_factored():
+    init, _ = adafactor()
+    params = {"w": jnp.zeros((64, 128))}
+    st_ = init(params)
+    n_state = sum(x.size for x in jax.tree.leaves((st_.m, st_.v)))
+    assert n_state == 64 + 128  # rows + cols, not 64×128
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(100.0 * np.sqrt(10), rel=1e-5)
+    n2 = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(n2) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert float(lr(jnp.int32(10))) == pytest.approx(1e-3)
+    assert float(lr(jnp.int32(100))) == pytest.approx(0.0, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_retention():
+    tree = {"w": jnp.arange(12.0).reshape(3, 4), "nested": {"b": jnp.ones(3)}}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for step in (1, 2, 3):
+            mgr.save(jax.tree.map(lambda x: x * step, tree), step,
+                     extras={"loader": {"seed": 0, "step": step}})
+        assert mgr.all_steps() == [2, 3]  # retention
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            tree)
+        restored, manifest = mgr.restore(like)
+        assert manifest["step"] == 3
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]) * 3)
+
+
+def test_checkpoint_async_save():
+    tree = {"w": jnp.ones((128, 128))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(tree, 5, blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 5
+
+
+def test_checkpoint_atomicity_no_partial_dirs():
+    tree = {"w": jnp.ones((4,))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(tree, 1)
+        for sub in os.listdir(d):
+            assert not sub.endswith(".tmp")
+
+
+def test_train_resume_bit_exact():
+    """Fault tolerance end-to-end: interrupt + resume ≡ uninterrupted."""
+    from repro.launch.train import train
+
+    with tempfile.TemporaryDirectory() as d:
+        losses_full = train("qwen2-1.5b", smoke=True, steps=6, batch=2,
+                            seq=32, ckpt_dir=None, log_every=100)
+        train("qwen2-1.5b", smoke=True, steps=3, batch=2, seq=32,
+              ckpt_dir=d, save_every=3, log_every=100)
+        losses_resumed = train("qwen2-1.5b", smoke=True, steps=6, batch=2,
+                               seq=32, ckpt_dir=d, resume=True,
+                               save_every=100, log_every=100)
+        assert losses_resumed[-1] == pytest.approx(losses_full[-1], rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_dedup_examples_removes_duplicates():
+    corpus = SyntheticCorpus(vocab=500, n_docs=600, dup_rate=0.5, seed=3)
+    docs = corpus.documents()
+    uniq, stats = dedup_examples(
+        docs, ExecConfig(memory_rows=256, page_rows=32, fanin=4,
+                         batch_rows=128))
+    keys = {tuple(d.tolist()) for d in docs}
+    assert len(uniq) <= len(keys) and len(uniq) >= 0.95 * len(keys)
+    assert len({tuple(d.tolist()) for d in uniq}) == len(uniq)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seq_len=st.integers(32, 256), n=st.integers(1, 200),
+       seed=st.integers(0, 1000))
+def test_pack_by_length_invariants(seq_len, n, seed):
+    rng = np.random.default_rng(seed)
+    docs = [rng.integers(0, 100, rng.integers(1, seq_len + 1)).astype(np.int32)
+            for _ in range(n)]
+    packed = pack_by_length(docs, seq_len)
+    # every token preserved; rows are seq_len wide; padding is -1
+    assert packed.shape[1] == seq_len
+    n_tokens = sum(len(d) for d in docs)
+    assert int((packed >= 0).sum()) == n_tokens
+    # density of first-fit-decreasing ≥ naive one-doc-per-row
+    assert packed.shape[0] <= len(docs)
+
+
+def test_loader_deterministic_resume():
+    a = DataLoader(1000, 4, 16, seed=7)
+    b1 = [a.next() for _ in range(3)]
+    b = DataLoader.from_state(1000, 4, 16, {"seed": 7, "step": 2})
+    np.testing.assert_array_equal(b.next()["tokens"], b1[2]["tokens"])
