@@ -1,0 +1,13 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test bench bench-absorb
+
+test:           ## tier-1 suite (property tests skip if hypothesis absent)
+	python -m pytest -x -q
+
+bench-absorb:   ## sort-absorb vs merge-absorb microbenchmark
+	python benchmarks/bench_absorb.py
+
+bench:          ## paper-figure benchmark driver
+	python benchmarks/run.py

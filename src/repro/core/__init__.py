@@ -5,7 +5,23 @@ generation + wide merging in the final merge step) as a composable JAX
 module, plus the baselines it is measured against.
 """
 from repro.core.types import AggState, ExecConfig, SpillStats, EMPTY, MAX_KEY
-from repro.core.sorted_ops import sorted_groupby, finalize, sort_state, segmented_combine, merge_absorb
+from repro.core.dispatch import (
+    Backend,
+    BackendUnavailable,
+    backend_available,
+    get_backend,
+    register_backend,
+    registered_backends,
+)
+from repro.core.ordered_index import OrderedIndex, merge_ranks
+from repro.core.sorted_ops import (
+    sorted_groupby,
+    finalize,
+    sort_state,
+    segmented_combine,
+    merge_absorb,
+    merge_absorb_many,
+)
 from repro.core.insort import insort_aggregate, sort_then_stream_aggregate
 from repro.core.hash_agg import hash_aggregate, f1_hash_aggregate
 from repro.core.instream import instream_aggregate
@@ -27,11 +43,20 @@ __all__ = [
     "SpillStats",
     "EMPTY",
     "MAX_KEY",
+    "Backend",
+    "BackendUnavailable",
+    "backend_available",
+    "get_backend",
+    "register_backend",
+    "registered_backends",
+    "OrderedIndex",
+    "merge_ranks",
     "sorted_groupby",
     "finalize",
     "sort_state",
     "segmented_combine",
     "merge_absorb",
+    "merge_absorb_many",
     "insort_aggregate",
     "sort_then_stream_aggregate",
     "hash_aggregate",

@@ -1,0 +1,156 @@
+"""Backend registry for the ordered-index engine.
+
+Every grouping primitive (argsort, segmented combine, sorted merge-absorb)
+used to be selected by a ``backend: str`` threaded through each call site
+with ad-hoc lazy imports.  This module centralizes that plumbing:
+
+* ``register_backend(name, loader)`` — loaders build a :class:`Backend`
+  on first use and may raise :class:`BackendUnavailable` (capability
+  probing: e.g. the Pallas backend probes its kernel imports).
+* ``get_backend(name)`` — resolves a name (or ``"auto"``) to a cached
+  :class:`Backend`.  ``"auto"`` prefers Pallas on TPU and XLA elsewhere.
+* ``should_interpret()`` — the single source of truth for Pallas
+  ``interpret=`` mode: interpret everywhere except on real TPU, with an
+  explicit ``REPRO_PALLAS_INTERPRET`` env override for experiments.
+
+Built-in backends:
+
+* ``"xla"``    — pure-jnp reference engine (:mod:`repro.core.ordered_index`);
+  always available, bit-exact oracle for tests and dry-runs.
+* ``"pallas"`` — TPU kernels (:mod:`repro.kernels`): bitonic argsort,
+  fused segmented scan, and the merge-path merge-absorb kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable
+
+import jax
+
+
+class BackendUnavailable(RuntimeError):
+    """A backend's loader determined it cannot run in this environment."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """The three primitives every engine backend must provide.
+
+    ``argsort(keys) -> perm``
+        Key-argsort of a 1-D uint32 vector (EMPTY sorts to the end).
+    ``segmented_combine(state) -> state``
+        Combine adjacent equal-key rows of a *key-sorted* AggState;
+        unique groups compacted to the front, EMPTY-padded tail.
+    ``merge_sorted(a, b, assume_unique=False) -> state``
+        Linear merge-absorb of two *key-sorted* AggStates; returns a
+        sorted, duplicate-combined state of capacity ``|a| + |b|``.
+        Must not perform a full sort of the union.  ``assume_unique``
+        promises both inputs are duplicate-free (the OrderedIndex
+        invariant), licensing a cheaper pair-combine.
+    """
+
+    name: str
+    argsort: Callable
+    segmented_combine: Callable
+    merge_sorted: Callable
+
+
+_loaders: dict[str, Callable[[], Backend]] = {}
+_cache: dict[str, Backend] = {}
+
+
+def register_backend(
+    name: str, loader: Callable[[], Backend], *, overwrite: bool = False
+) -> None:
+    """Register a lazy backend loader.  The loader runs on first
+    ``get_backend(name)`` and may raise :class:`BackendUnavailable`."""
+    if name in _loaders and not overwrite:
+        raise ValueError(f"backend {name!r} already registered")
+    _loaders[name] = loader
+    _cache.pop(name, None)
+
+
+def registered_backends() -> tuple[str, ...]:
+    return tuple(_loaders)
+
+
+def backend_available(name: str) -> bool:
+    """Capability probe: can ``name`` actually be constructed here?"""
+    try:
+        get_backend(name)
+        return True
+    except (KeyError, BackendUnavailable):
+        return False
+
+
+def _auto_order() -> tuple[str, ...]:
+    # On TPU the Pallas kernels are the fast path; everywhere else they
+    # run in interpret mode and the XLA engine wins.
+    if jax.default_backend() == "tpu":
+        return ("pallas", "xla")
+    return ("xla", "pallas")
+
+
+def get_backend(name: str = "xla") -> Backend:
+    """Resolve a backend name (or ``"auto"``) to a Backend instance."""
+    if name in ("auto", None):
+        last: Exception | None = None
+        for cand in _auto_order():
+            try:
+                return get_backend(cand)
+            except (KeyError, BackendUnavailable) as e:  # keep probing
+                last = e
+        raise BackendUnavailable(f"no usable backend among {_auto_order()}: {last}")
+    if name in _cache:
+        return _cache[name]
+    if name not in _loaders:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {registered_backends()}"
+        )
+    be = _loaders[name]()
+    _cache[name] = be
+    return be
+
+
+def resolve_backend_name(name: str) -> str:
+    """Normalize ``"auto"`` to a concrete backend name (for static args)."""
+    return get_backend(name).name
+
+
+def should_interpret() -> bool:
+    """Pallas interpret mode: True off-TPU, overridable via env."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
+
+
+def _load_xla() -> Backend:
+    import jax.numpy as jnp
+
+    from repro.core import ordered_index as oi
+
+    return Backend(
+        name="xla",
+        argsort=jnp.argsort,
+        segmented_combine=oi.segmented_combine_xla,
+        merge_sorted=oi.merge_absorb_xla,
+    )
+
+
+def _load_pallas() -> Backend:
+    try:
+        from repro.kernels import ops as kops
+    except Exception as e:  # missing pallas / mosaic in this build
+        raise BackendUnavailable(f"pallas kernels unavailable: {e}") from e
+    return Backend(
+        name="pallas",
+        argsort=kops.argsort_u32,
+        segmented_combine=kops.segmented_combine,
+        merge_sorted=kops.merge_absorb_sorted,
+    )
+
+
+register_backend("xla", _load_xla)
+register_backend("pallas", _load_pallas)

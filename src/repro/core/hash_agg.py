@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.core import merge as merge_mod
 from repro.core import run_generation as rg
 from repro.core import sorted_ops
@@ -76,6 +77,7 @@ def hash_aggregate(
     the interesting-orderings deficit the paper's operator removes.
     """
     cfg = cfg or ExecConfig()
+    backend = dispatch.resolve_backend_name(backend)
     stats = SpillStats()
     keys = np.asarray(keys, dtype=np.uint32)
     if payload is not None:
@@ -125,9 +127,10 @@ def hash_aggregate(
                         level + 1, int(edges[f]), int(edges[f + 1]))
 
     process(hk, payload, 0, 0, 1 << 32)
-    # splice partition outputs together (they cover disjoint hash ranges)
-    cat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outputs)
-    cat = sorted_ops.sort_state(cat, backend=backend)  # order by hash
+    # splice partition outputs together: each is sorted (by hash) over a
+    # disjoint hash range, so a tree of linear merges orders the union —
+    # no full sort of the spliced result.
+    cat = sorted_ops.merge_absorb_many(outputs, backend=backend, assume_unique=True)
     # report user keys (un-hash), order remains hash order
     out = AggState(
         keys=jnp.where(cat.keys != EMPTY, unhash_u32(cat.keys), jnp.uint32(EMPTY)),

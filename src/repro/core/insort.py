@@ -23,6 +23,7 @@ import math
 import jax
 import numpy as np
 
+from repro.core import dispatch
 from repro.core import merge as merge_mod
 from repro.core import run_generation as rg
 from repro.core.types import AggState, ExecConfig, SpillStats
@@ -66,6 +67,7 @@ def insort_aggregate(
       in-run dedup (Fig 2 bottom).
     """
     cfg = cfg or ExecConfig()
+    backend = dispatch.resolve_backend_name(backend)  # "auto" → concrete
     if early_aggregation and run_policy == "rs":
         # replacement selection via the ordered index (§3.3): runs up to
         # 2M, absorption continues at ~M/O throughout — the paper's model.
@@ -116,6 +118,7 @@ def sort_then_stream_aggregate(
     then in-stream aggregation of the sorted stream.  Spill volume grows
     with the *input* at every merge level — the paper's worst case."""
     cfg = cfg or ExecConfig()
+    backend = dispatch.resolve_backend_name(backend)
     keys = np.asarray(keys, dtype=np.uint32)
     if keys.shape[0] <= cfg.memory_rows:  # in-memory quicksort case: no spill
         from repro.core.sorted_ops import sorted_groupby

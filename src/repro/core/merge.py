@@ -198,7 +198,11 @@ def _wide_merge_jit(
         rstar = jnp.argmin(low)  # EMPTY == uint32 max ⇒ exhausted runs lose
         start = cursors[rstar] * P
         page = _page_of(store_state, rstar, start, P)
-        # absorb the page into the ordered index (batched insert, §3.4)
+        # absorb the page into the ordered index (batched insert, §3.4):
+        # both sides are sorted, so this is a linear merge — O(W+P) per
+        # page instead of the former O((W+P)·log(W+P)) re-sort.  Pages
+        # may carry intra-run duplicates (replacement-selection runs), so
+        # the general combine path is used, not the pair-combine.
         merged = sorted_ops.merge_absorb(index, page, backend=backend)  # cap W + P
         cursors = cursors.at[rstar].add(1)
         # merge frontier: the least key any run can still deliver
@@ -272,5 +276,12 @@ def wide_merge(
     stats.pages_read += int(pages_read)
     stats.max_index_occupancy = max(stats.max_index_occupancy, int(max_occ))
     stats.index_overflowed = bool(overflow) or stats.index_overflowed
-    del out_cur
+    emitted = int(out_cur)
+    stats.rows_emitted += emitted
+    # Accounting invariants: the merge emits every distinct key exactly
+    # once, and never more rows than the runs held.
+    total_in = int(sum(r.length for r in runs))
+    assert emitted <= total_in, (emitted, total_in)
+    if out_capacity >= total_in:  # nothing could have been dropped
+        assert emitted == int(out.occupancy()), (emitted, int(out.occupancy()))
     return out

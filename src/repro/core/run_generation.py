@@ -50,18 +50,25 @@ def _absorb_batch(table: AggState, batch_keys, batch_payload, *, backend="xla"):
     """One read-sort-write step: sort/dedupe the batch (paper §5), merge it
     into the ordered index, and report the new occupancy."""
     batch = sorted_ops.absorb(rows_to_state(batch_keys, batch_payload), backend=backend)
-    merged = sorted_ops.merge_absorb(table, batch, backend=backend)
+    # table and batch are both duplicate-free ordered indexes: the insert
+    # is a linear merge + pair-combine, never a sort.
+    merged = sorted_ops.merge_absorb(table, batch, backend=backend, assume_unique=True)
     return merged, merged.occupancy()
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "dedup", "backend"))
 def _sort_chunk(keys, payload, capacity: int, *, dedup: bool, backend="xla"):
+    """Sort (and optionally dedup) one chunk, padded to the fixed run
+    capacity.  Chunks are produced at ≤ capacity rows, so only padding is
+    ever needed; trimming would silently drop rows."""
     state = rows_to_state(keys, payload)
+    assert state.capacity <= capacity, (
+        f"chunk of {state.capacity} rows exceeds run capacity {capacity}"
+    )
     if dedup:
         state = sorted_ops.absorb(state, backend=backend)
     else:
         state = sorted_ops.sort_state(state, backend=backend)
-    # pad/trim to fixed run capacity
     pad = capacity - state.capacity
     if pad > 0:
         state = concat_states(state, empty_state(pad, state.width))
@@ -172,8 +179,6 @@ def generate_runs(
 
 
 def _mask_state(state: AggState, keep) -> AggState:
-    import jax.numpy as jnp
-
     return AggState(
         keys=jnp.where(keep, state.keys, jnp.uint32(EMPTY)),
         count=jnp.where(keep, state.count, 0),
@@ -187,14 +192,22 @@ def _mask_state(state: AggState, keep) -> AggState:
 def _rs_absorb(run_table, next_table, frontier, bkeys, bpay, *, backend="xla"):
     batch = sorted_ops.absorb(rows_to_state(bkeys, bpay), backend=backend)
     valid = batch.keys != EMPTY
+    # the sorted batch splits at the frontier into a `lo` prefix and a
+    # `hi` suffix; masking keeps `lo` sorted as-is, while `hi` must be
+    # rolled left past the masked prefix to restore the sorted/EMPTY-
+    # padded invariant merge_absorb requires.
+    n_lo = jnp.sum((valid & (batch.keys < frontier)).astype(jnp.int32))
     hi = _mask_state(batch, valid & (batch.keys >= frontier))
+    hi = jax.tree.map(lambda x: jnp.roll(x, -n_lo, axis=0), hi)
     lo = _mask_state(batch, valid & (batch.keys < frontier))
     cap_r, cap_n = run_table.capacity, next_table.capacity
     run_table = jax.tree.map(
-        lambda x: x[:cap_r], sorted_ops.merge_absorb(run_table, hi, backend=backend)
+        lambda x: x[:cap_r],
+        sorted_ops.merge_absorb(run_table, hi, backend=backend, assume_unique=True),
     )
     next_table = jax.tree.map(
-        lambda x: x[:cap_n], sorted_ops.merge_absorb(next_table, lo, backend=backend)
+        lambda x: x[:cap_n],
+        sorted_ops.merge_absorb(next_table, lo, backend=backend, assume_unique=True),
     )
     return run_table, next_table, run_table.occupancy(), next_table.occupancy()
 
@@ -202,8 +215,6 @@ def _rs_absorb(run_table, next_table, frontier, bkeys, bpay, *, backend="xla"):
 @functools.partial(jax.jit, static_argnames=("quantum", "backend"))
 def _rs_evict(run_table, quantum: int, *, backend="xla"):
     """Advance the eviction scan: pop the lowest `quantum` rows."""
-    import jax.numpy as jnp
-
     cap = run_table.capacity
     evicted = jax.tree.map(lambda x: x[:quantum], run_table)
     src = jnp.minimum(jnp.arange(cap) + quantum, cap - 1)
@@ -279,19 +290,19 @@ def generate_runs_rs(
         # everything absorbed in memory (run_table ∪ next_table, but with
         # no eviction ever, next_table is empty and frontier 0)
         return [], run_table, stats
-    # drain: finish the open run with run_table's remainder, then the rest
+    # drain: finish the open run with run_table's remainder, then the rest.
+    # Both tables satisfy the OrderedIndex invariant throughout (merge,
+    # trim, and evict-shift all preserve it), so no re-sort is needed.
     occ_r = int(run_table.occupancy())
     if occ_r > 0:
-        open_chunks.append(jax.tree.map(lambda x: x[:occ_r],
-                                        sorted_ops.sort_state(run_table)))
+        open_chunks.append(jax.tree.map(lambda x: x[:occ_r], run_table))
         open_len += occ_r
         stats.rows_spilled_run_generation += occ_r
     close_run()
     occ_n = int(next_table.occupancy())
     if occ_n > 0:
         runs.append(Run(
-            state=jax.tree.map(lambda x: x[: occ_n + B],
-                               sorted_ops.sort_state(next_table)),
+            state=jax.tree.map(lambda x: x[: occ_n + B], next_table),
             length=occ_n,
         ))
         stats.rows_spilled_run_generation += occ_n

@@ -4,17 +4,25 @@ in-memory b-tree).
 The paper replaces priority queues with an ordered in-memory index whose
 batched usage pattern it spells out in §3.4: *sort the incoming batch, then
 turn the per-row search into a merge*.  On a vector machine that whole
-recipe collapses into three primitives over fixed-capacity tiles:
+recipe collapses into four primitives over fixed-capacity tiles:
 
 * ``sort_state``          — key-sort a tile (EMPTY keys sink to the end);
 * ``segmented_combine``   — absorb equal keys by combining aggregate states
                             (the b-tree "absorb" of §3);
-* ``merge_absorb``        — batched insert = concat + sort + combine.
+* ``absorb``              — sort + combine: canonicalize *unsorted* rows;
+* ``merge_absorb``        — batched insert of one **sorted** state into
+                            another: a linear merge (searchsorted-rank
+                            scatter on XLA, the merge-path kernel on
+                            Pallas) — never a full sort of the union.
 
-Everything is fixed-shape and jit-friendly.  ``backend='pallas'`` routes the
-sort / segmented reduction through the Pallas TPU kernels in
-:mod:`repro.kernels`; the default XLA path is the oracle-equivalent
-implementation used on CPU and in dry-runs.
+``merge_absorb`` requires both inputs key-sorted (duplicates within either
+input are fine; they combine in the same pass).  Full argsort remains only
+in ``sort_state``/``absorb`` for genuinely unsorted input.
+
+This module is the thin user-facing layer: the engine lives in
+:mod:`repro.core.ordered_index` (XLA) and :mod:`repro.kernels` (Pallas),
+selected per call through the registry in :mod:`repro.core.dispatch`
+(``backend="xla" | "pallas" | "auto"``).
 """
 from __future__ import annotations
 
@@ -23,9 +31,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import EMPTY, AggState, concat_states, rows_to_state, take
-
-_INF = jnp.float32(jnp.inf)
+from repro.core import dispatch
+from repro.core.ordered_index import OrderedIndex  # noqa: F401  (re-export)
+from repro.core.types import EMPTY, AggState, rows_to_state, take
 
 
 # ---------------------------------------------------------------------------
@@ -35,32 +43,13 @@ _INF = jnp.float32(jnp.inf)
 
 def sort_state(state: AggState, *, backend: str = "xla") -> AggState:
     """Key-sort all rows of a state; EMPTY (=uint32 max) rows sink to the end."""
-    if backend == "pallas":
-        from repro.kernels import ops as _ops  # lazy; optional path
-
-        perm = _ops.argsort_u32(state.keys)
-    else:
-        perm = jnp.argsort(state.keys)
+    perm = dispatch.get_backend(backend).argsort(state.keys)
     return take(state, perm)
 
 
 # ---------------------------------------------------------------------------
 # segmented combine (absorb duplicates)
 # ---------------------------------------------------------------------------
-
-
-def _segment_ids(sorted_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """(head flags, segment index) for a key-sorted vector; EMPTY rows get
-    an out-of-range segment so scatters drop them."""
-    n = sorted_keys.shape[0]
-    valid = sorted_keys != EMPTY
-    neq = jnp.concatenate(
-        [jnp.ones((1,), dtype=bool), sorted_keys[1:] != sorted_keys[:-1]]
-    )
-    heads = neq & valid
-    seg = jnp.cumsum(heads.astype(jnp.int32)) - 1
-    seg = jnp.where(valid, seg, n)  # out-of-range ⇒ dropped by scatters
-    return heads, seg
 
 
 def segmented_combine(state: AggState, *, backend: str = "xla") -> AggState:
@@ -71,20 +60,7 @@ def segmented_combine(state: AggState, *, backend: str = "xla") -> AggState:
     equivalent of inserting a sorted batch into the paper's b-tree and
     letting existing keys absorb the new rows.
     """
-    if backend == "pallas":
-        from repro.kernels import ops as _ops
-
-        return _ops.segmented_combine(state)
-    n = state.capacity
-    heads, seg = _segment_ids(state.keys)
-    out_keys = jnp.full((n,), EMPTY, dtype=jnp.uint32).at[seg].set(
-        state.keys, mode="drop"
-    )
-    count = jnp.zeros((n,), jnp.int32).at[seg].add(state.count, mode="drop")
-    ssum = jnp.zeros_like(state.sum).at[seg].add(state.sum, mode="drop")
-    smin = jnp.full_like(state.min, _INF).at[seg].min(state.min, mode="drop")
-    smax = jnp.full_like(state.max, -_INF).at[seg].max(state.max, mode="drop")
-    return AggState(keys=out_keys, count=count, sum=ssum, min=smin, max=smax)
+    return dispatch.get_backend(backend).segmented_combine(state)
 
 
 def absorb(state: AggState, *, backend: str = "xla") -> AggState:
@@ -92,14 +68,50 @@ def absorb(state: AggState, *, backend: str = "xla") -> AggState:
     return segmented_combine(sort_state(state, backend=backend), backend=backend)
 
 
-def merge_absorb(table: AggState, incoming: AggState, *, backend: str = "xla") -> AggState:
+def merge_absorb(
+    table: AggState,
+    incoming: AggState,
+    *,
+    backend: str = "xla",
+    assume_unique: bool = False,
+) -> AggState:
     """Batched insert of ``incoming`` into the ordered index ``table``.
 
-    Returns a state of capacity ``len(table) + len(incoming)`` — sorted,
-    duplicate-free, EMPTY-padded.  The caller decides whether the result
-    still fits "memory" (paper: whether the b-tree must spill).
+    Both inputs must be **key-sorted** (EMPTY-padded; duplicates within
+    either input are combined too).  Returns a state of capacity
+    ``len(table) + len(incoming)`` — sorted, duplicate-free, EMPTY-padded
+    — via a linear merge: no full argsort on any backend.  The caller
+    decides whether the result still fits "memory" (paper: whether the
+    b-tree must spill).
+
+    ``assume_unique=True`` promises both inputs are also duplicate-free
+    (the OrderedIndex invariant): merged groups then hold at most two
+    rows and the absorb drops to a single pair-combine.
     """
-    return absorb(concat_states(table, incoming), backend=backend)
+    return dispatch.get_backend(backend).merge_sorted(
+        table, incoming, assume_unique=assume_unique
+    )
+
+
+def merge_absorb_many(
+    states: list[AggState], *, backend: str = "xla", assume_unique: bool = False
+) -> AggState:
+    """Balanced tree of linear merges over already-sorted states (the
+    multi-fragment absorb used by the distributed group-by and the hash
+    splice).  Capacity of the result is the summed input capacity."""
+    assert states, "merge_absorb_many needs at least one state"
+    states = list(states)
+    while len(states) > 1:
+        nxt = [
+            merge_absorb(
+                states[i], states[i + 1], backend=backend, assume_unique=assume_unique
+            )
+            for i in range(0, len(states) - 1, 2)
+        ]
+        if len(states) % 2:
+            nxt.append(states[-1])
+        states = nxt
+    return states[0]
 
 
 # ---------------------------------------------------------------------------

@@ -142,6 +142,7 @@ class SpillStats:
     merge_steps: int = 0
     merge_levels: int = 0
     pages_read: int = 0
+    rows_emitted: int = 0  # rows streamed out of the wide merge's left edge
     index_overflowed: bool = False
     max_index_occupancy: int = 0
 

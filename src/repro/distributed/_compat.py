@@ -1,0 +1,32 @@
+"""shard_map across jax versions.
+
+Newer jax exposes ``jax.shard_map`` (with ``check_vma=``); 0.4.x only has
+``jax.experimental.shard_map.shard_map`` (with ``check_rep=``).  All
+distributed modules import :func:`shard_map` from here.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _impl = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _impl
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool | None = None):
+    """Wrap ``f`` with shard_map; ``check=False`` disables the replication
+    /varying-manual-axes check under whichever name this jax spells it."""
+    kw = {} if check is None else {_CHECK_KW: check}
+    try:
+        return _impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    except TypeError:
+        if check is None:
+            raise
+        other = "check_rep" if _CHECK_KW == "check_vma" else "check_vma"
+        return _impl(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{other: check}
+        )

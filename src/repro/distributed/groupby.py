@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import sorted_ops
 from repro.core.types import EMPTY, AggState, rows_to_state
+from repro.distributed._compat import shard_map
 
 
 def _range_of(keys, world):
@@ -88,8 +89,14 @@ def make_distributed_groupby(mesh, axis: str = "data", *, capacity: int):
             ).reshape((world * quota,) + x.shape[1:]),
             send,
         )
-        # 3. local wide merge of `world` sorted fragments
-        merged = sorted_ops.absorb(recv)
+        # 3. local wide merge of `world` sorted fragments: each peer's
+        #    slice arrives sorted and EMPTY-padded, so a balanced tree of
+        #    linear merge-absorbs (§3.4) replaces the former full re-sort.
+        frags = [
+            jax.tree.map(lambda x: x[i * quota : (i + 1) * quota], recv)
+            for i in range(world)
+        ]
+        merged = sorted_ops.merge_absorb_many(frags, assume_unique=True)
         return jax.tree.map(lambda x: x[:capacity], merged)
 
     def _fill_like(x):
@@ -100,7 +107,7 @@ def make_distributed_groupby(mesh, axis: str = "data", *, capacity: int):
         return jnp.zeros((), x.dtype)
 
     def run(keys, payload):
-        fn = jax.shard_map(
+        fn = shard_map(
             local_fn, mesh=mesh,
             in_specs=(P(axis), P(axis, None)),
             out_specs=AggState(

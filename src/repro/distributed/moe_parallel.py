@@ -34,6 +34,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ModelConfig
 
+from repro.distributed._compat import shard_map
+
 
 def _local_sorted_dispatch(x_flat, eidx, w, e: int, cap: int):
     """Sort-based grouping of local rows by expert id (paper §3).
@@ -155,22 +157,13 @@ def ep_moe_block(p, cfg: ModelConfig, x, mesh=None):
         "wo": P("model", None, None),
     }
 
-    try:
-        shard_fn = jax.shard_map(
-            functools.partial(_wrapped, fn, cfg),
-            mesh=mesh,
-            in_specs=(pspec, P(dpspec, None, None)),
-            out_specs=(P(dpspec, None, None), P()),
-            check_vma=False,
-        )
-    except TypeError:  # older jax spells it check_rep
-        shard_fn = jax.shard_map(
-            functools.partial(_wrapped, fn, cfg),
-            mesh=mesh,
-            in_specs=(pspec, P(dpspec, None, None)),
-            out_specs=(P(dpspec, None, None), P()),
-            check_rep=False,
-        )
+    shard_fn = shard_map(
+        functools.partial(_wrapped, fn, cfg),
+        mesh=mesh,
+        in_specs=(pspec, P(dpspec, None, None)),
+        out_specs=(P(dpspec, None, None), P()),
+        check=False,
+    )
     y, aux = shard_fn({k: p[k] for k in pspec}, x)
     if m.num_shared_experts:
         from repro.models.layers import mlp

@@ -14,6 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.distributed._compat import shard_map
 
 
 def ring_allgather_matmul(mesh, axis: str = "model"):
@@ -46,20 +47,13 @@ def ring_allgather_matmul(mesh, axis: str = "model"):
         (y, _), _ = jax.lax.scan(step, (y0, x), jnp.arange(world))
         return y.reshape(world * s_loc, w.shape[-1])
 
-    try:  # output is replicated by construction, but VMA can't prove it
-        return jax.shard_map(
-            local, mesh=mesh,
-            in_specs=(P(axis, None), P(None, None)),
-            out_specs=P(None, None),
-            check_vma=False,
-        )
-    except TypeError:
-        return jax.shard_map(
-            local, mesh=mesh,
-            in_specs=(P(axis, None), P(None, None)),
-            out_specs=P(None, None),
-            check_rep=False,
-        )
+    # output is replicated by construction, but VMA can't prove it
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=P(None, None),
+        check=False,
+    )
 
 
 def reference_allgather_matmul(mesh, axis: str = "model"):
@@ -69,17 +63,9 @@ def reference_allgather_matmul(mesh, axis: str = "model"):
         xg = jax.lax.all_gather(x, axis, axis=0, tiled=True)
         return jnp.dot(xg, w, preferred_element_type=jnp.float32).astype(x.dtype)
 
-    try:
-        return jax.shard_map(
-            local, mesh=mesh,
-            in_specs=(P(axis, None), P(None, None)),
-            out_specs=P(None, None),
-            check_vma=False,
-        )
-    except TypeError:
-        return jax.shard_map(
-            local, mesh=mesh,
-            in_specs=(P(axis, None), P(None, None)),
-            out_specs=P(None, None),
-            check_rep=False,
-        )
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=P(None, None),
+        check=False,
+    )

@@ -20,6 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.distributed._compat import shard_map
 
 
 def bubble_fraction(stages: int, microbatches: int) -> float:
@@ -94,10 +95,7 @@ def make_pipeline(mesh, apply_layer, n_layers: int, axis: str = "pod",
             in_specs=(P(axis), P()),   # params layer-split across stages
             out_specs=P(),
         )
-        try:
-            fn = jax.shard_map(local, check_vma=False, **kw)
-        except TypeError:
-            fn = jax.shard_map(local, check_rep=False, **kw)
+        fn = shard_map(local, check=False, **kw)
         return fn(params, x)
 
     return run

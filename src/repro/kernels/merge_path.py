@@ -1,0 +1,126 @@
+"""Merge-path kernel: fused linear merge + absorb of two sorted tiles.
+
+This is the Pallas twin of :mod:`repro.core.ordered_index`'s rank-scatter
+merge, and the replacement for the bitonic-merge kernel in
+:mod:`repro.kernels.merge_aggregate` on the engine's hot path.
+
+Merge Path (Green, McColl & Bader): output lane ``k`` of the merged
+sequence lies on the ``k``-th anti-diagonal of the |A|×|B| merge grid;
+the crossing point ``(i, k-i)`` — "``i`` rows of A and ``k-i`` rows of B
+precede output ``k``" — is found by a per-lane binary search over the
+diagonal.  All ``|A|+|B|`` lanes search independently, so the whole merge
+is ⌈log₂N⌉ data-parallel probe rounds followed by ONE gather, instead of
+the bitonic merge's log₂(2N) full-width compare-exchange sweeps over keys
+*and every payload column*.  The duplicate absorb (flag-based segmented
+scan, shared with :mod:`repro.kernels.segmented_reduce`) runs fused in
+the same VMEM residency, so one page absorb costs one HBM round trip.
+
+Inputs need only be **sorted** — duplicates within either input are fine
+(they stay adjacent through the merge and the scan combines them).
+EMPTY (= uint32 max) padding ranks to the tail like any other key.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.segmented_reduce import _segmented_scan
+
+
+def _merge_path_split(ka: jax.Array, kb: jax.Array):
+    """Per-lane diagonal binary search.
+
+    ka (1, N) and kb (1, M) sorted ascending.  Returns ``(ia, ib, take_a)``
+    of shape (1, N+M): lane ``k`` of the merged output reads ``A[ia[k]]``
+    when ``take_a[k]`` else ``B[ib[k]]`` (stable: A wins ties).
+    """
+    n, m = ka.shape[-1], kb.shape[-1]
+    a, b = ka[0], kb[0]
+    k = jax.lax.broadcasted_iota(jnp.int32, (1, n + m), 1)
+    lo = jnp.maximum(0, k - m)  # feasible: all of B already consumed
+    hi = jnp.minimum(k, n)
+    # predicate g(i) = "taking i rows of A before lane k is feasible",
+    # i.e. A[i-1] <= B[k-i]; monotone decreasing in i, so binary search
+    # for the largest feasible i.  Boundary clauses make the comparison
+    # vacuous when either side is exhausted.
+    for _ in range(int(math.ceil(math.log2(max(n, m) + 1))) + 1):
+        mid = (lo + hi + 1) >> 1
+        a_prev = jnp.take(a, jnp.clip(mid - 1, 0, n - 1))
+        b_next = jnp.take(b, jnp.clip(k - mid, 0, m - 1))
+        ok = (mid <= 0) | (k - mid >= m) | (a_prev <= b_next)
+        lo = jnp.where(ok, mid, lo)
+        hi = jnp.where(ok, hi, mid - 1)
+    ia = lo
+    ib = k - lo
+    a_key = jnp.take(a, jnp.clip(ia, 0, n - 1))
+    b_key = jnp.take(b, jnp.clip(ib, 0, m - 1))
+    take_a = (ia < n) & ((ib >= m) | (a_key <= b_key))
+    return jnp.clip(ia, 0, n - 1), jnp.clip(ib, 0, m - 1), take_a
+
+
+def _kernel(ka_ref, ca_ref, sa_ref, mna_ref, mxa_ref,
+            kb_ref, cb_ref, sb_ref, mnb_ref, mxb_ref,
+            ok_ref, oc_ref, os_ref, omn_ref, omx_ref, ot_ref):
+    ka, kb = ka_ref[...], kb_ref[...]
+    ia, ib, take_a = _merge_path_split(ka, kb)
+
+    def sel1(xa, xb):  # (1,N)/(1,M) → (1,N+M)
+        return jnp.where(take_a, jnp.take(xa[0], ia), jnp.take(xb[0], ib))
+
+    def selv(xa, xb):  # (V,N)/(V,M) → (V,N+M); take_a broadcasts over V
+        ga = jnp.take(xa, ia[0], axis=-1)
+        gb = jnp.take(xb, ib[0], axis=-1)
+        return jnp.where(take_a, ga, gb)
+
+    keys = sel1(ka, kb)
+    cnt = sel1(ca_ref[...], cb_ref[...])
+    ssum = selv(sa_ref[0], sb_ref[0])
+    smin = selv(mna_ref[0], mnb_ref[0])
+    smax = selv(mxa_ref[0], mxb_ref[0])
+    # absorb duplicates (segmented scan) while everything is VMEM-resident
+    cnt, ssum, smin, smax, tails = _segmented_scan(keys, cnt, ssum, smin, smax)
+    ok_ref[...] = keys
+    oc_ref[...] = cnt
+    os_ref[...] = ssum[None]
+    omn_ref[...] = smin[None]
+    omx_ref[...] = smax[None]
+    ot_ref[...] = tails
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_path_tiles(ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb, *,
+                     interpret: bool = True):
+    """Merge two sorted tile sets — (T,N)+(T,M) keys, (T,V,·) payloads —
+    into (T,N+M) merged + scanned aggregates + tail mask.  Unlike the
+    bitonic kernel, N and M need not match (compaction by the caller,
+    see ops.py)."""
+    t, n = ka.shape
+    m = kb.shape[-1]
+    v = sa.shape[1]
+    k_out = n + m
+    sa_spec = pl.BlockSpec((1, n), lambda i: (i, 0))
+    sb_spec = pl.BlockSpec((1, m), lambda i: (i, 0))
+    va_spec = pl.BlockSpec((1, v, n), lambda i: (i, 0, 0))
+    vb_spec = pl.BlockSpec((1, v, m), lambda i: (i, 0, 0))
+    o1 = pl.BlockSpec((1, k_out), lambda i: (i, 0))
+    ov = pl.BlockSpec((1, v, k_out), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t, k_out), ka.dtype),
+            jax.ShapeDtypeStruct((t, k_out), ca.dtype),
+            jax.ShapeDtypeStruct((t, v, k_out), sa.dtype),
+            jax.ShapeDtypeStruct((t, v, k_out), mna.dtype),
+            jax.ShapeDtypeStruct((t, v, k_out), mxa.dtype),
+            jax.ShapeDtypeStruct((t, k_out), jnp.bool_),
+        ),
+        grid=(t,),
+        in_specs=[sa_spec, sa_spec, va_spec, va_spec, va_spec,
+                  sb_spec, sb_spec, vb_spec, vb_spec, vb_spec],
+        out_specs=(o1, o1, ov, ov, ov, o1),
+        interpret=interpret,
+    )(ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb)

@@ -14,13 +14,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch as _dispatch
 from repro.core.types import EMPTY, AggState
 from repro.kernels import bitonic_sort as _bs
 from repro.kernels import grouped_matmul as _gm
 from repro.kernels import merge_aggregate as _ma
+from repro.kernels import merge_path as _mp
 from repro.kernels import segmented_reduce as _sr
 
-INTERPRET = True  # CPU container; set False on TPU
+# Centralized in repro.core.dispatch: interpret everywhere except on real
+# TPU (override with REPRO_PALLAS_INTERPRET=0/1).
+INTERPRET = _dispatch.should_interpret()
 
 
 def _next_pow2(n: int) -> int:
@@ -105,9 +109,34 @@ def segmented_combine(state: AggState) -> AggState:
     return jax.tree.map(lambda x: x[:n0], out)
 
 
-def merge_absorb_sorted(a: AggState, b: AggState) -> AggState:
-    """Fused wide-merge inner step: both inputs key-sorted; returns the
-    combined state of capacity |a|+|b| (sorted, deduped, EMPTY-padded)."""
+def merge_absorb_sorted(a: AggState, b: AggState, *, assume_unique: bool = False) -> AggState:
+    """Fused merge-absorb of two key-sorted states via the merge-path
+    kernel: linear merge (per-lane diagonal binary search, no sort/
+    compare-exchange network), absorb fused in-kernel.  Returns the
+    combined state of capacity exactly |a|+|b| (sorted, duplicate-
+    combined, EMPTY-padded) so jitted callers see the same shapes as the
+    XLA engine.  ``assume_unique`` is accepted for interface parity; the
+    in-VMEM segmented scan handles both cases in the same pass."""
+    del assume_unique
+    cap_out = a.capacity + b.capacity
+    na = _next_pow2(a.capacity)
+    nb = _next_pow2(b.capacity)
+    a = _pad_state(a, na)
+    b = _pad_state(b, nb)
+    ka, ca, sa, mna, mxa = _state_to_tiles(a, na)
+    kb, cb, sb, mnb, mxb = _state_to_tiles(b, nb)
+    k2, c2, s2, mn2, mx2, tails = _mp.merge_path_tiles(
+        ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb, interpret=INTERPRET
+    )
+    out = _compact(k2, c2, s2, mn2, mx2, tails, a.width)
+    # compacted rows ≤ |a|+|b| ≤ na+nb: trimming the EMPTY tail is lossless
+    return jax.tree.map(lambda x: x[:cap_out], out)
+
+
+def merge_absorb_sorted_bitonic(a: AggState, b: AggState) -> AggState:
+    """Previous-generation fused step (bitonic merge network); kept for
+    benchmarking against the merge-path kernel."""
+    cap_out = a.capacity + b.capacity
     n = _next_pow2(max(a.capacity, b.capacity))
     a = _pad_state(a, n)
     b = _pad_state(b, n)
@@ -116,7 +145,8 @@ def merge_absorb_sorted(a: AggState, b: AggState) -> AggState:
     k2, c2, s2, mn2, mx2, tails = _ma.merge_absorb_tiles(
         ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb, interpret=INTERPRET
     )
-    return _compact(k2, c2, s2, mn2, mx2, tails, a.width)
+    out = _compact(k2, c2, s2, mn2, mx2, tails, a.width)
+    return jax.tree.map(lambda x: x[: min(cap_out, 2 * n)], out)
 
 
 def _pad_val(x):

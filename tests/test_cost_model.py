@@ -2,7 +2,7 @@
 match the executable implementation's exact accounting (property-based)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import ExecConfig, hash_aggregate, insort_aggregate
 from repro.core import cost_model as cm

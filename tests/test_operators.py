@@ -138,3 +138,100 @@ def test_join_by_grouping_matches_oracle():
     want_anti = np.setdiff1d(np.unique(lk), np.unique(rk))
     assert np.array_equal(np.sort(s), want_semi)
     assert np.array_equal(np.sort(a), want_anti)
+
+
+# ---------------------------------------------------------------------------
+# NumPy-oracle coverage for rollup / count_and_count_distinct, including
+# bit-packing edge cases (max day/month values, keys near the EMPTY
+# sentinel)
+# ---------------------------------------------------------------------------
+
+
+def test_rollup_matches_numpy_oracle_per_level():
+    """Every rollup level's (key → sum) mapping must equal the NumPy
+    oracle, at the extreme ends of the packed bit ranges: day uses 5 bits
+    (max 31), month 4 bits (max 15)."""
+    n = 5_000
+    day = RNG.integers(1, 32, n).astype(np.uint32)      # includes day=31
+    month = RNG.integers(1, 16, n).astype(np.uint32)    # includes month=15
+    year = RNG.integers(0, 3, n).astype(np.uint32)
+    pay = RNG.normal(size=(n, 1)).astype(np.float32).astype(np.float64)
+    levels, _ = rollup(day, month, year, pay.astype(np.float32), CFG,
+                       output_estimate=3 * 15 * 31)
+
+    def oracle(keys_np):
+        out = {}
+        for k, v in zip(keys_np.tolist(), pay[:, 0].tolist()):
+            out[k] = out.get(k, 0.0) + v
+        return out
+
+    packed = {
+        "day": (year << 9) | (month << 5) | day,
+        "month": (year << 4) | month,
+        "year": year,
+        "all": np.zeros(n, np.uint32),
+    }
+    for name, keys_np in packed.items():
+        st = levels[name]
+        k = np.asarray(st.keys)
+        valid = k != EMPTY
+        got = dict(zip(k[valid].tolist(), np.asarray(st.sum)[valid, 0].tolist()))
+        want = oracle(keys_np.astype(np.uint32))
+        assert set(got) == set(want), f"level {name}: key sets differ"
+        for kk, vv in want.items():
+            assert abs(got[kk] - vv) < 1e-2 * max(1.0, abs(vv)), (name, kk)
+
+
+def test_rollup_bitpacking_no_collisions_at_max_values():
+    """day=31/month=15 must not bleed into neighbouring fields: two dates
+    that differ only in (day, month) map to distinct fine keys and to the
+    same year key."""
+    day = np.array([31, 1], np.uint32)
+    month = np.array([1, 15], np.uint32)   # (31, 1) vs (1, 15): same year
+    year = np.array([2, 2], np.uint32)
+    pay = np.array([[1.0], [10.0]], np.float32)
+    levels, _ = rollup(day, month, year, pay, CFG, output_estimate=4)
+    assert int(levels["day"].occupancy()) == 2     # no fine-key collision
+    assert int(levels["month"].occupancy()) == 2   # distinct months
+    assert int(levels["year"].occupancy()) == 1    # one year bucket
+    assert float(np.asarray(levels["year"].sum)[0, 0]) == 11.0
+
+
+def test_count_distinct_keys_near_empty_sentinel():
+    """Packed (g, a) keys that reach MAX_KEY = EMPTY-1 must survive; the
+    EMPTY bit pattern itself is reserved and must never be produced by
+    valid (g, a) pairs below the packing limit."""
+    from repro.core import MAX_KEY
+
+    lo_bits = 8
+    g_max = (1 << (32 - lo_bits)) - 1   # top of the g range
+    # (g_max, 254) packs to 0xFFFFFFFE == MAX_KEY; (g_max, 255) would be
+    # EMPTY and is excluded by construction of the input
+    g = np.array([g_max, g_max, g_max, 7, 7], np.uint32)
+    a = np.array([254, 254, 253, 254, 1], np.uint32)
+    assert int((g[0].astype(np.uint64) << lo_bits) | a[0]) == int(MAX_KEY)
+    st, _ = count_and_count_distinct(g, a, lo_bits=lo_bits, cfg=CFG,
+                                     output_estimate=4)
+    k = np.asarray(st.keys)
+    valid = k != EMPTY
+    # oracle: g_max has 3 rows over 2 distinct a; 7 has 2 rows, 2 distinct
+    sums = {int(kk): tuple(s) for kk, s in zip(
+        k[valid], np.asarray(st.sum)[valid].astype(np.int64).tolist())}
+    assert sums[g_max] == (3, 2), sums   # count(a)=3, count(distinct a)=2
+    assert sums[7] == (2, 2), sums
+
+
+def test_count_and_count_distinct_matches_numpy_oracle_dense():
+    """Dense random sweep of the fused plan against the NumPy oracle."""
+    g = RNG.integers(0, 40, 10_000).astype(np.uint32)
+    a = RNG.integers(0, 64, 10_000).astype(np.uint32)
+    st, _ = count_and_count_distinct(g, a, lo_bits=6, cfg=CFG,
+                                     output_estimate=40 * 64)
+    k = np.asarray(st.keys)
+    valid = k != EMPTY
+    sums = np.asarray(st.sum)[valid].astype(np.int64)
+    got = {int(kk): (int(s0), int(s1)) for kk, (s0, s1) in zip(k[valid], sums)}
+    for gg in np.unique(g):
+        m = g == gg
+        want = (int(m.sum()), len(np.unique(a[m])))
+        assert got[int(gg)] == want, (gg, got[int(gg)], want)
