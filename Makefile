@@ -1,13 +1,20 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-absorb
+.PHONY: test bench bench-absorb bench-keywidth bench-figures
 
 test:           ## tier-1 suite (property tests skip if hypothesis absent)
 	python -m pytest -x -q
 
+bench:          ## smoke-mode absorb + key-width benches (CI sanity)
+	python benchmarks/bench_absorb.py --smoke
+	python benchmarks/bench_keywidth.py --smoke
+
 bench-absorb:   ## sort-absorb vs merge-absorb microbenchmark
 	python benchmarks/bench_absorb.py
 
-bench:          ## paper-figure benchmark driver
+bench-keywidth: ## uint32 vs uint64 absorb/merge throughput
+	python benchmarks/bench_keywidth.py
+
+bench-figures:  ## paper-figure benchmark driver
 	python benchmarks/run.py

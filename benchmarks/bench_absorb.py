@@ -60,8 +60,12 @@ def main() -> int:
     p.add_argument("--iters", type=int, default=30)
     p.add_argument("--backend", type=str, default="xla",
                    choices=("xla", "pallas", "auto"))
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sizes / few iters — CI sanity run, not a measurement")
     p.add_argument("--csv", type=str, default=None, help="also write CSV here")
     args = p.parse_args()
+    if args.smoke:
+        args.m, args.iters, args.ratios = 1 << 10, 3, "1,4"
 
     rng = np.random.default_rng(0)
     ratios = [int(r) for r in args.ratios.split(",")]
@@ -108,6 +112,9 @@ def main() -> int:
     if be == "pallas" and dispatch.should_interpret():
         print("note: pallas ran in interpret mode (no TPU) — timings are "
               "emulator overhead, not kernel performance")
+        return 0
+    if args.smoke:  # sanity run: sizes too small for a meaningful race
+        print("smoke OK (perf win-check skipped at smoke sizes)")
         return 0
     if not wins_at_4:
         print("WARNING: merge-absorb did not beat sort-absorb at some M/B >= 4")

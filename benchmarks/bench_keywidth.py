@@ -1,0 +1,123 @@
+"""Microbenchmark: uint32 vs uint64 keys through the ordered-index engine.
+
+PR 2 widened the engine to a parameterized key dtype so composite keys
+(KeySpec) stop competing for 32 bits.  This benchmark measures what that
+width costs on the two hot primitives:
+
+* **absorb**   — canonicalize an unsorted batch (argsort + combine);
+* **merge**    — merge-absorb a sorted batch into a sorted table (the
+  linear merge every engine consumer runs per input batch).
+
+For each key width it reports wall-clock and effective row throughput;
+the u64/u32 ratio is the price of the wider key (on XLA: wider compares
+plus x64 mode; on Pallas: a second uint32 lane through every kernel).
+
+Usage:  PYTHONPATH=src python benchmarks/bench_keywidth.py [--m 32768]
+            [--ratio 8] [--width 2] [--iters 20] [--backend xla]
+            [--smoke] [--csv out.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sorted_ops
+from repro.core.types import AggState, key_dtype_context, rows_to_state
+
+
+def _keys(rng, rows: int, dtype) -> np.ndarray:
+    if np.dtype(dtype) == np.uint64:
+        # spread over > 32 bits so 64-bit comparisons do real work
+        hi = rng.integers(0, 1 << 20, rows).astype(np.uint64)
+        lo = rng.integers(0, 1 << 20, rows).astype(np.uint64)
+        return (hi << np.uint64(24)) | lo
+    return rng.integers(0, 1 << 28, rows).astype(np.uint32)
+
+
+def _sorted_state(rng, rows: int, width: int, dtype) -> AggState:
+    pay = None if width == 0 else rng.normal(size=(rows, width)).astype(np.float32)
+    return sorted_ops.absorb(rows_to_state(_keys(rng, rows, dtype), pay))
+
+
+def _time(fn, *args, iters: int) -> float:
+    out = fn(*args)  # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--m", type=int, default=1 << 15, help="table rows M")
+    p.add_argument("--ratio", type=int, default=8, help="table/batch ratio M/B")
+    p.add_argument("--width", type=int, default=2, help="payload columns V")
+    p.add_argument("--iters", type=int, default=20)
+    p.add_argument("--backend", type=str, default="xla",
+                   choices=("xla", "pallas", "auto"))
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sizes / few iters — CI sanity run, not a measurement")
+    p.add_argument("--csv", type=str, default=None, help="also write CSV here")
+    args = p.parse_args()
+    if args.smoke:
+        args.m, args.iters = 1 << 10, 3
+
+    rng = np.random.default_rng(0)
+    m, b = args.m, max(1, args.m // args.ratio)
+    be = args.backend
+
+    header = (f"{'dtype':>7} {'op':>7} {'rows':>9} {'per-call':>11} "
+              f"{'Mrows/s':>9}")
+    print(f"backend={be}  M={m}  B={b}  width={args.width}  iters={args.iters}"
+          f"{'  [smoke]' if args.smoke else ''}")
+    print(header)
+    print("-" * len(header))
+
+    rows_out = []
+    per_dtype: dict[str, dict[str, float]] = {}
+    for dtype in (np.uint32, np.uint64):
+        name = np.dtype(dtype).name
+        with key_dtype_context(dtype):
+            table = _sorted_state(rng, m, args.width, dtype)
+            batch = _sorted_state(rng, b, args.width, dtype)
+            raw = rows_to_state(
+                _keys(rng, m, dtype),
+                None if args.width == 0 else
+                rng.normal(size=(m, args.width)).astype(np.float32),
+            )
+            absorb_jit = jax.jit(lambda s: sorted_ops.absorb(s, backend=be))
+            merge_jit = jax.jit(lambda t, x: sorted_ops.merge_absorb(
+                t, x, backend=be, assume_unique=True))
+            t_absorb = _time(absorb_jit, raw, iters=args.iters)
+            t_merge = _time(merge_jit, table, batch, iters=args.iters)
+        per_dtype[name] = {"absorb": t_absorb, "merge": t_merge}
+        for op, t, n in (("absorb", t_absorb, m), ("merge", t_merge, m + b)):
+            print(f"{name:>7} {op:>7} {n:>9} {t * 1e3:>9.3f}ms {n / t / 1e6:>9.2f}")
+            rows_out.append((name, op, n, t))
+
+    r_a = per_dtype["uint64"]["absorb"] / per_dtype["uint32"]["absorb"]
+    r_m = per_dtype["uint64"]["merge"] / per_dtype["uint32"]["merge"]
+    print(f"\nu64/u32 cost ratio: absorb {r_a:.2f}x, merge {r_m:.2f}x")
+
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write("dtype,op,rows,seconds\n")
+            for r in rows_out:
+                f.write(",".join(str(x) for x in r) + "\n")
+
+    from repro.core import dispatch
+
+    if be == "pallas" and dispatch.should_interpret():
+        print("note: pallas ran in interpret mode (no TPU) — timings are "
+              "emulator overhead, not kernel performance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

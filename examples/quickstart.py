@@ -63,3 +63,29 @@ _, tstats = sort_then_stream_aggregate(users[:200_000], None, cfg)
 print(f"\ntraditional sort-then-aggregate on 200k rows spills "
       f"{tstats.total_spill_rows:,} rows — vs in-sort "
       f"{insort_aggregate(users[:200_000], None, cfg, output_estimate=n_users)[1].total_spill_rows:,}")
+
+# 5) the schema front door: the same query declaratively — a composite
+#    (user, country, hour) key with the full 32-bit user-id space needs
+#    43 bits, so the engine widens to uint64 under the hood (no manual
+#    bit shifting, no 32-bit ceiling)
+import repro
+
+spec = repro.KeySpec.of(user=32, country=6, hour=5)
+res = repro.aggregate(
+    {"user": users, "country": country, "hour": hour},
+    by=spec,
+    values=latency,
+    aggs=repro.AggSpec("count", "avg"),
+    order_by=("user",),          # any key prefix is free — it's one sort
+    cfg=cfg,
+    output_estimate=n_users,
+)
+rel = res.relation()
+print(f"\nfront door: {res.occupancy():,} (user, country, hour) groups "
+      f"[key dtype {res.state.keys.dtype}], spill "
+      f"{res.stats.total_spill_rows:,} rows")
+print(f"  first group user={rel['user'][0]} country={rel['country'][0]} "
+      f"hour={rel['hour'][0]} count={rel['count'][0]} "
+      f"avg={float(rel['avg'][0, 0]):.1f}ms")
+print(f"  plan: {res.plan['predicted_spill_insort']:,.0f} predicted in-sort "
+      f"spill vs {res.plan['predicted_spill_hash']:,.0f} hash")

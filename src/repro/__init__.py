@@ -1,0 +1,33 @@
+"""repro — sort-based duplicate removal, grouping, and aggregation.
+
+The schema front door lives at the package root:
+
+    import repro
+    result = repro.aggregate(
+        {"country": c, "hour": h}, by=repro.KeySpec.of(country=8, hour=5),
+        values=latency, aggs=repro.AggSpec("count", "avg"),
+    )
+
+Exports resolve lazily so importing :mod:`repro` stays cheap for
+subsystems (models, launch, …) that never touch the engine.
+"""
+from __future__ import annotations
+
+_SCHEMA_EXPORTS = (
+    "aggregate",
+    "rollup",
+    "AggResult",
+    "AggSpec",
+    "KeyColumn",
+    "KeySpec",
+)
+
+__all__ = list(_SCHEMA_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _SCHEMA_EXPORTS:
+        from repro.core import schema
+
+        return getattr(schema, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

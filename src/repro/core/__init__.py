@@ -4,7 +4,19 @@ The paper's contribution (Do & Graefe: early aggregation during run
 generation + wide merging in the final merge step) as a composable JAX
 module, plus the baselines it is measured against.
 """
-from repro.core.types import AggState, ExecConfig, SpillStats, EMPTY, MAX_KEY
+from repro.core.types import (
+    AggState,
+    ExecConfig,
+    SpillStats,
+    EMPTY,
+    EMPTY64,
+    MAX_KEY,
+    MAX_KEY64,
+    empty_key,
+    key_dtype_context,
+    key_dtype_for_bits,
+    max_key,
+)
 from repro.core.dispatch import (
     Backend,
     BackendUnavailable,
@@ -35,6 +47,13 @@ from repro.core.operators import (
     pack_keys,
     unpack_keys,
 )
+from repro.core.schema import (
+    AggResult,
+    AggSpec,
+    KeyColumn,
+    KeySpec,
+    aggregate,
+)
 from repro.core import cost_model
 
 __all__ = [
@@ -42,7 +61,18 @@ __all__ = [
     "ExecConfig",
     "SpillStats",
     "EMPTY",
+    "EMPTY64",
     "MAX_KEY",
+    "MAX_KEY64",
+    "empty_key",
+    "key_dtype_context",
+    "key_dtype_for_bits",
+    "max_key",
+    "AggResult",
+    "AggSpec",
+    "KeyColumn",
+    "KeySpec",
+    "aggregate",
     "Backend",
     "BackendUnavailable",
     "backend_available",

@@ -38,7 +38,9 @@ class Backend:
     """The three primitives every engine backend must provide.
 
     ``argsort(keys) -> perm``
-        Key-argsort of a 1-D uint32 vector (EMPTY sorts to the end).
+        Key-argsort of a 1-D uint32/uint64 vector (the per-dtype EMPTY
+        sentinel sorts to the end).  uint64 callers hold
+        :func:`repro.core.types.key_dtype_context`.
     ``segmented_combine(state) -> state``
         Combine adjacent equal-key rows of a *key-sorted* AggState;
         unique groups compacted to the front, EMPTY-padded tail.
@@ -146,7 +148,7 @@ def _load_pallas() -> Backend:
         raise BackendUnavailable(f"pallas kernels unavailable: {e}") from e
     return Backend(
         name="pallas",
-        argsort=kops.argsort_u32,
+        argsort=kops.argsort_keys,
         segmented_combine=kops.segmented_combine,
         merge_sorted=kops.merge_absorb_sorted,
     )

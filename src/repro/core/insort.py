@@ -26,7 +26,7 @@ import numpy as np
 from repro.core import dispatch
 from repro.core import merge as merge_mod
 from repro.core import run_generation as rg
-from repro.core.types import AggState, ExecConfig, SpillStats
+from repro.core.types import AggState, ExecConfig, SpillStats, key_dtype_context
 
 
 def plan_pre_merge_levels(
@@ -54,7 +54,8 @@ def insort_aggregate(
     early_aggregation: bool = True,
     use_wide_merge: bool = True,
     run_policy: str = "rs",
-    backend: str = "xla",
+    backend: str = "auto",
+    widths: tuple[int, int, int] | None = None,
 ) -> tuple[AggState, SpillStats]:
     """Group/aggregate an unsorted stream under a memory budget of M rows.
 
@@ -68,43 +69,47 @@ def insort_aggregate(
     """
     cfg = cfg or ExecConfig()
     backend = dispatch.resolve_backend_name(backend)  # "auto" → concrete
-    if early_aggregation and run_policy == "rs":
-        # replacement selection via the ordered index (§3.3): runs up to
-        # 2M, absorption continues at ~M/O throughout — the paper's model.
-        runs, table, stats = rg.generate_runs_rs(keys, payload, cfg, backend=backend)
-    else:
-        policy = "early_agg" if early_aggregation else "inrun_dedup"
-        runs, table, stats = rg.generate_runs(
-            keys, payload, cfg, policy=policy, backend=backend
-        )
-    if table is not None:  # in-memory case (paper Fig 6): nothing spilled
-        return table, stats
+    keys = rg._np_keys(keys)
+    with key_dtype_context(keys):
+        if early_aggregation and run_policy == "rs":
+            # replacement selection via the ordered index (§3.3): runs up to
+            # 2M, absorption continues at ~M/O throughout — the paper's model.
+            runs, table, stats = rg.generate_runs_rs(
+                keys, payload, cfg, backend=backend, widths=widths
+            )
+        else:
+            policy = "early_agg" if early_aggregation else "inrun_dedup"
+            runs, table, stats = rg.generate_runs(
+                keys, payload, cfg, policy=policy, backend=backend, widths=widths
+            )
+        if table is not None:  # in-memory case (paper Fig 6): nothing spilled
+            return table, stats
 
-    if output_estimate is None:
-        # production default: assume strong reduction (the common case the
-        # paper optimizes); correctness never depends on this.
-        output_estimate = cfg.memory_rows * cfg.fanin
+        if output_estimate is None:
+            # production default: assume strong reduction (the common case the
+            # paper optimizes); correctness never depends on this.
+            output_estimate = cfg.memory_rows * cfg.fanin
 
-    if not use_wide_merge:
-        out = merge_mod.final_merge_traditional(
-            runs, cfg, aggregate=early_aggregation or policy == "inrun_dedup",
-            stats=stats, backend=backend,
-        )
+        if not use_wide_merge:
+            out = merge_mod.final_merge_traditional(
+                runs, cfg, aggregate=early_aggregation or policy == "inrun_dedup",
+                stats=stats, backend=backend,
+            )
+            return out, stats
+
+        pre = plan_pre_merge_levels(output_estimate, cfg, len(runs))
+        for _ in range(pre):
+            if len(runs) <= 1:
+                break
+            runs = merge_mod.traditional_merge(
+                runs, cfg, aggregate_during_merge=True, stats=stats, backend=backend,
+                stop_at=max(1, math.ceil(len(runs) / cfg.fanin)),
+            )
+        if len(runs) == 1:
+            # everything already in one aggregated run: stream it out
+            return runs[0].state, stats
+        out = merge_mod.wide_merge(runs, cfg, stats=stats, backend=backend)
         return out, stats
-
-    pre = plan_pre_merge_levels(output_estimate, cfg, len(runs))
-    for _ in range(pre):
-        if len(runs) <= 1:
-            break
-        runs = merge_mod.traditional_merge(
-            runs, cfg, aggregate_during_merge=True, stats=stats, backend=backend,
-            stop_at=max(1, math.ceil(len(runs) / cfg.fanin)),
-        )
-    if len(runs) == 1:
-        # everything already in one aggregated run: stream it out
-        return runs[0].state, stats
-    out = merge_mod.wide_merge(runs, cfg, stats=stats, backend=backend)
-    return out, stats
 
 
 def sort_then_stream_aggregate(
@@ -112,22 +117,25 @@ def sort_then_stream_aggregate(
     payload: np.ndarray | None = None,
     cfg: ExecConfig | None = None,
     *,
-    backend: str = "xla",
+    backend: str = "auto",
 ) -> tuple[AggState, SpillStats]:
     """Baseline of Fig 2 (top): full external merge sort of the raw input,
     then in-stream aggregation of the sorted stream.  Spill volume grows
     with the *input* at every merge level — the paper's worst case."""
     cfg = cfg or ExecConfig()
     backend = dispatch.resolve_backend_name(backend)
-    keys = np.asarray(keys, dtype=np.uint32)
-    if keys.shape[0] <= cfg.memory_rows:  # in-memory quicksort case: no spill
-        from repro.core.sorted_ops import sorted_groupby
+    keys = rg._np_keys(keys)
+    with key_dtype_context(keys):
+        if keys.shape[0] <= cfg.memory_rows:  # in-memory quicksort: no spill
+            from repro.core.sorted_ops import sorted_groupby
 
-        return sorted_groupby(jax.numpy.asarray(keys), payload, backend=backend), SpillStats()
-    runs, _, stats = rg.generate_runs(keys, payload, cfg, policy="traditional", backend=backend)
-    if not runs:
-        raise AssertionError("traditional policy always writes runs")
-    out = merge_mod.final_merge_traditional(
-        runs, cfg, aggregate=False, stats=stats, backend=backend
-    )
-    return out, stats
+            return sorted_groupby(keys, payload, backend=backend), SpillStats()
+        runs, _, stats = rg.generate_runs(
+            keys, payload, cfg, policy="traditional", backend=backend
+        )
+        if not runs:
+            raise AssertionError("traditional policy always writes runs")
+        out = merge_mod.final_merge_traditional(
+            runs, cfg, aggregate=False, stats=stats, backend=backend
+        )
+        return out, stats

@@ -14,34 +14,39 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sorted_ops
-from repro.core.types import EMPTY, AggState, empty_state, rows_to_state
+from repro.core.types import (
+    AggState,
+    empty_like,
+    key_dtype_context,
+    rows_to_state,
+)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "out_capacity"))
-def instream_aggregate(
+@functools.partial(jax.jit, static_argnames=("chunk", "out_capacity", "widths"))
+def _instream_jit(
     sorted_keys: jax.Array,
     payload: jax.Array | None = None,
     *,
     chunk: int = 1024,
     out_capacity: int | None = None,
+    widths: tuple[int, int, int] | None = None,
 ) -> tuple[AggState, jax.Array]:
-    """Aggregate a key-sorted stream. Returns (output state, #groups)."""
     n = sorted_keys.shape[0]
     if out_capacity is None:
         out_capacity = n
     pad = (-n) % chunk
-    state = rows_to_state(sorted_keys, payload)
+    state = rows_to_state(sorted_keys, payload, widths=widths)
     if pad:
         state = jax.tree.map(
             lambda x, e: jnp.concatenate([x, e], axis=0),
             state,
-            empty_state(pad, state.width),
+            empty_like(state, pad),
         )
     nchunks = (n + pad) // chunk
     chunked = jax.tree.map(lambda x: x.reshape((nchunks, chunk) + x.shape[1:]), state)
 
-    out0 = empty_state(out_capacity, state.width)
-    carry0 = (empty_state(1, state.width), out0, jnp.int32(0))
+    out0 = empty_like(state, out_capacity)
+    carry0 = (empty_like(state, 1), out0, jnp.int32(0))
 
     def step(carry, ch):
         open_grp, out, cur = carry
@@ -64,7 +69,7 @@ def instream_aggregate(
                 (occ > 0).reshape((1,) * x.ndim), x, z
             ),
             open_grp,
-            empty_state(1, state.width),
+            empty_like(state, 1),
         )
         return (open_grp, out, cur + e), None
 
@@ -74,3 +79,19 @@ def instream_aggregate(
     idx = jnp.where(jnp.arange(1) < occ, cur + jnp.arange(1), out_capacity)
     out = jax.tree.map(lambda d, s: d.at[idx].set(s, mode="drop"), out, open_grp)
     return out, cur + occ
+
+
+def instream_aggregate(
+    sorted_keys: jax.Array,
+    payload: jax.Array | None = None,
+    *,
+    chunk: int = 1024,
+    out_capacity: int | None = None,
+    widths: tuple[int, int, int] | None = None,
+) -> tuple[AggState, jax.Array]:
+    """Aggregate a key-sorted stream. Returns (output state, #groups)."""
+    with key_dtype_context(sorted_keys):
+        return _instream_jit(
+            sorted_keys, payload, chunk=chunk, out_capacity=out_capacity,
+            widths=widths,
+        )

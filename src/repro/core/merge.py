@@ -27,12 +27,14 @@ import numpy as np
 from repro.core import sorted_ops
 from repro.core.run_generation import Run
 from repro.core.types import (
-    EMPTY,
     AggState,
     ExecConfig,
     SpillStats,
     concat_states,
+    empty_key,
+    empty_like,
     empty_state,
+    key_dtype_context,
     slice_rows,
 )
 
@@ -65,7 +67,7 @@ def stack_runs(runs: list[Run], page_rows: int, width: int) -> RunStore:
     for r in runs:
         s = r.state
         if s.capacity < cap:
-            s = concat_states(s, empty_state(cap - s.capacity, width))
+            s = concat_states(s, empty_like(s, cap - s.capacity))
         else:
             s = jax.tree.map(lambda x: x[:cap], s)
         padded.append(s)
@@ -77,9 +79,13 @@ def stack_runs(runs: list[Run], page_rows: int, width: int) -> RunStore:
 def _page_of(store_state: AggState, r, start, page_rows: int) -> AggState:
     """DMA one page (P rows) of run ``r`` into the shared input buffer."""
 
+    r = jnp.asarray(r, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+
     def f(x):
         sizes = (1, page_rows) + x.shape[2:]
-        starts = (r, start) + (0,) * (x.ndim - 2)
+        # uniform index dtype: x64 mode would otherwise mix int64/int32
+        starts = (r, start) + (jnp.int32(0),) * (x.ndim - 2)
         return jax.lax.dynamic_slice(x, starts, sizes)[0]
 
     return jax.tree.map(f, store_state)
@@ -176,7 +182,13 @@ def _wide_merge_jit(
     R, C = store_state.keys.shape
     P = page_rows
     W = index_rows + P  # index tile + headroom for one incoming page
+    kd = store_state.keys.dtype
     width = store_state.sum.shape[-1]
+    widths = (
+        store_state.sum.shape[-1],
+        store_state.min.shape[-1],
+        store_state.max.shape[-1],
+    )
     n_pages = (lens + P - 1) // P
     arange_R = jnp.arange(R)
 
@@ -184,9 +196,9 @@ def _wide_merge_jit(
         # priority queue over each run's next unread page's low key
         pos = jnp.clip(cursors * P, 0, C - 1)
         k = store_state.keys[arange_R, pos]
-        return jnp.where(cursors < n_pages, k, jnp.uint32(EMPTY))
+        return jnp.where(cursors < n_pages, k, empty_key(kd))
 
-    out0 = empty_state(out_capacity, width)
+    out0 = empty_state(out_capacity, width, key_dtype=kd, widths=widths)
 
     def cond(carry):
         cursors, *_ = carry
@@ -208,9 +220,11 @@ def _wide_merge_jit(
         # merge frontier: the least key any run can still deliver
         frontier = jnp.min(next_low_keys(cursors))
         keys = merged.keys
-        occ = merged.occupancy()
+        # int32 throughout: x64 mode would silently promote sums to int64
+        # and break the while_loop carry signature
+        occ = merged.occupancy().astype(jnp.int32)
         final_mask = keys < frontier  # EMPTY never < frontier unless frontier==EMPTY
-        e = jnp.sum(final_mask.astype(jnp.int32))
+        e = jnp.sum(final_mask.astype(jnp.int32)).astype(jnp.int32)
         # emit the final prefix out of the left edge of the index
         idx = jnp.where(jnp.arange(W + P) < e, out_cur + jnp.arange(W + P), out_capacity)
 
@@ -223,7 +237,7 @@ def _wide_merge_jit(
         src = jnp.minimum(jnp.arange(W) + e, W + P - 1)
         shifted = jax.tree.map(lambda x: jnp.take(x, src, axis=0), merged)
         live = jnp.arange(W) < (occ - e)
-        new_keys = jnp.where(live, shifted.keys, jnp.uint32(EMPTY))
+        new_keys = jnp.where(live, shifted.keys, empty_key(kd))
         index = AggState(new_keys, shifted.count, shifted.sum, shifted.min, shifted.max)
         resident = occ - e
         max_occ = jnp.maximum(max_occ, resident)
@@ -232,7 +246,7 @@ def _wide_merge_jit(
 
     carry = (
         jnp.zeros((R,), jnp.int32),
-        empty_state(W, width),
+        empty_state(W, width, key_dtype=kd, widths=widths),
         out0,
         jnp.int32(0),
         jnp.int32(0),
@@ -260,17 +274,18 @@ def wide_merge(
     wide merge often needs well under M (Example 4: ~40%).
     """
     width = runs[0].state.width
-    store = stack_runs(runs, cfg.page_rows, width)
-    if out_capacity is None:
-        out_capacity = int(sum(r.length for r in runs))
-    out, out_cur, pages_read, max_occ, overflow = _wide_merge_jit(
-        store.state,
-        store.lens,
-        page_rows=cfg.page_rows,
-        index_rows=index_rows or cfg.memory_rows,
-        out_capacity=out_capacity,
-        backend=backend,
-    )
+    with key_dtype_context(runs[0].state):
+        store = stack_runs(runs, cfg.page_rows, width)
+        if out_capacity is None:
+            out_capacity = int(sum(r.length for r in runs))
+        out, out_cur, pages_read, max_occ, overflow = _wide_merge_jit(
+            store.state,
+            store.lens,
+            page_rows=cfg.page_rows,
+            index_rows=index_rows or cfg.memory_rows,
+            out_capacity=out_capacity,
+            backend=backend,
+        )
     stats.merge_steps += 1
     stats.merge_levels += 1
     stats.pages_read += int(pages_read)

@@ -26,8 +26,16 @@ import numpy as np
 
 from repro.core import hash_agg as hash_mod
 from repro.core import insort as insort_mod
+from repro.core import schema as schema_mod
 from repro.core import sorted_ops
-from repro.core.types import EMPTY, AggState, ExecConfig, SpillStats
+from repro.core.types import (
+    EMPTY,
+    AggState,
+    ExecConfig,
+    SpillStats,
+    empty_key,
+    key_dtype_context,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -60,32 +68,45 @@ def group_by(
     *,
     algorithm: str = "auto",
     output_estimate: int | None = None,
-    backend: str = "xla",
+    backend: str = "auto",
+    widths: tuple[int, int, int] | None = None,
 ) -> tuple[AggState, SpillStats]:
     """Duplicate removal / grouping / aggregation of an unsorted input.
 
     algorithm: "auto" (≡ "insort" — the paper's systems-only choice),
     "insort", "hash", "sort_then_stream", or "inmemory" (no budget).
+    Keys may be uint32 or (for composite keys packed by
+    :class:`repro.core.schema.KeySpec`) uint64; ``repro.aggregate`` is
+    the schema-level front door over this dispatch.
     """
     cfg = cfg or ExecConfig()
     if algorithm in ("auto", "insort"):
         return insort_mod.insort_aggregate(
-            keys, payload, cfg, output_estimate=output_estimate, backend=backend
+            keys, payload, cfg, output_estimate=output_estimate, backend=backend,
+            widths=widths,
         )
     if algorithm == "hash":
         return hash_mod.hash_aggregate(
-            keys, payload, cfg, output_estimate=output_estimate, backend=backend
+            keys, payload, cfg, output_estimate=output_estimate, backend=backend,
+            widths=widths,
         )
     if algorithm == "f1_hash":
-        return hash_mod.f1_hash_aggregate(keys, payload, cfg, backend=backend)
+        return hash_mod.f1_hash_aggregate(
+            keys, payload, cfg, backend=backend, widths=widths
+        )
     if algorithm == "sort_then_stream":
         return insort_mod.sort_then_stream_aggregate(keys, payload, cfg, backend=backend)
     if algorithm == "inmemory":
-        st = sorted_ops.sorted_groupby(
-            jnp.asarray(np.asarray(keys, dtype=np.uint32)),
-            None if payload is None else jnp.asarray(payload),
-            backend=backend,
-        )
+        from repro.core.run_generation import _np_keys
+
+        nk = _np_keys(keys)
+        with key_dtype_context(nk):
+            st = sorted_ops.sorted_groupby(
+                nk,
+                None if payload is None else jnp.asarray(payload),
+                backend=backend,
+                widths=widths,
+            )
         return st, SpillStats()
     raise ValueError(f"unknown algorithm {algorithm!r}")
 
@@ -153,24 +174,36 @@ def count_and_count_distinct(g, a, lo_bits: int, cfg=None, *, algorithm="auto", 
 
 def rollup(day, month, year, payload=None, cfg=None, **kw):
     """``group by rollup(day, month, year)`` from ONE sort (§2.2): sort on
-    (year, month, day); every coarser level is an in-stream pass over the
+    (year, month, day); every coarser level is a segmented combine of the
     finer level's (already sorted) output.  Hash plans need one hash table
-    per level."""
-    day = jnp.asarray(day, jnp.uint32)
-    month = jnp.asarray(month, jnp.uint32)
-    year = jnp.asarray(year, jnp.uint32)
-    key = (year << 9) | (month << 5) | day  # 4 bits month? generous: 9/5 bits
-    fine, stats = group_by(np.asarray(key), payload, cfg, algorithm="insort", **kw)
-    vk = fine.valid()
-    levels = {"day": fine}
-    ym = jnp.where(vk, fine.keys >> 5, jnp.uint32(EMPTY))
-    by_month = sorted_ops.sorted_groupby(ym, fine.sum)
-    levels["month"] = by_month
-    yy = jnp.where(by_month.valid(), by_month.keys >> 4, jnp.uint32(EMPTY))
-    levels["year"] = sorted_ops.sorted_groupby(yy, by_month.sum)
-    tot_key = jnp.where(levels["year"].valid(), jnp.uint32(0), jnp.uint32(EMPTY))
-    levels["all"] = sorted_ops.sorted_groupby(tot_key, levels["year"].sum)
-    return levels, stats
+    per level.
+
+    Thin wrapper over the generic :func:`repro.core.schema.rollup` (any
+    prefix hierarchy, any key width) with the legacy (year 23 / month 4 /
+    day 5 bits) uint32 packing and level names.  All four value planes
+    are carried so every level keeps (N, V) sum/min/max shapes; coarse
+    levels now aggregate over the original *rows* (count(month-level) is
+    the month's row count, min/max are true per-level extrema) instead of
+    re-aggregating the finer level's sums.
+    """
+    spec = schema_mod.KeySpec.of(year=23, month=4, day=5)
+    cols = {
+        "year": np.asarray(year, np.uint32),
+        "month": np.asarray(month, np.uint32),
+        "day": np.asarray(day, np.uint32),
+    }
+    aggs = ("count", "sum", "min", "max") if payload is not None else ("count",)
+    out, stats = schema_mod.rollup(
+        cols, by=spec, values=payload, aggs=schema_mod.AggSpec(*aggs),
+        cfg=cfg, **kw,
+    )
+    legacy = {
+        "day": ("year", "month", "day"),
+        "month": ("year", "month"),
+        "year": ("year",),
+        "all": (),
+    }
+    return {name: out[lvl].state for name, lvl in legacy.items()}, stats
 
 
 def intersect_distinct(a, b, cfg=None, *, algorithm="auto", **kw):
@@ -196,22 +229,47 @@ def intersect_distinct(a, b, cfg=None, *, algorithm="auto", **kw):
         sa.rows_spilled_merge += sb.total_spill_rows + extra
     else:
         sa.rows_spilled_merge += sb.total_spill_rows
-    # merge join of sorted duplicate-free key streams
-    ka, kb = da.keys, db.keys
-    hit = jnp.isin(ka, kb[kb != EMPTY]) & (ka != EMPTY)
-    out = jnp.where(hit, ka, jnp.uint32(EMPTY))
-    out = jnp.sort(out)
+    with key_dtype_context(da):
+        out = _merge_probe_intersect(da.keys, db.keys)
     return out, sa
 
 
+@jax.jit
+def _merge_probe_intersect(ka: jax.Array, kb: jax.Array) -> jax.Array:
+    """Merge-join of two sorted, duplicate-free, EMPTY-padded key streams.
+
+    Each ``ka`` row binary-searches ``kb`` once (a searchsorted merge
+    probe — O(N·log M) total, versus the O(N·M) ``jnp.isin`` membership
+    test this replaces), and hits are compacted to the front with the
+    same cumsum-invert gather the engine uses — no sort, no scatter.
+    EMPTY never probes equal because ``kb[pos]`` at the clip boundary is
+    either EMPTY≠key or the key EMPTY is excluded explicitly.
+    """
+    sentinel = empty_key(ka.dtype)
+    n, m = ka.shape[0], kb.shape[0]
+    pos = jnp.searchsorted(kb, ka, side="left", method="scan_unrolled")
+    probed = jnp.take(kb, jnp.minimum(pos, m - 1), mode="clip")
+    hit = (probed == ka) & (ka != sentinel)
+    # compact hits to the front (gather via running-count inversion)
+    csum = jnp.cumsum(hit.astype(jnp.int32))
+    n_hit = csum[-1]
+    j = jnp.arange(n, dtype=jnp.int32)
+    src = jnp.searchsorted(csum, j + 1, side="left", method="scan_unrolled")
+    src = jnp.minimum(src, n - 1).astype(jnp.int32)
+    live = j < n_hit
+    return jnp.where(live, jnp.take(ka, src, mode="clip"), sentinel)
+
+
 def validate_against_oracle(state: AggState, keys, payload=None):
-    """NumPy oracle check used across the test suite."""
-    keys = np.asarray(keys, dtype=np.uint32)
-    mask = keys != EMPTY
+    """NumPy oracle check used across the test suite (uint32 or uint64)."""
+    keys = np.asarray(keys)
+    if keys.dtype != np.uint64:
+        keys = keys.astype(np.uint32)
+    mask = keys != empty_key(keys.dtype)
     keys = keys[mask]
     uk, inv = np.unique(keys, return_inverse=True)
     got_k = np.asarray(state.keys)
-    got_valid = got_k != EMPTY
+    got_valid = got_k != empty_key(got_k.dtype)
     got = got_k[got_valid]
     order = np.argsort(got, kind="stable")
     assert np.array_equal(np.sort(got), uk), "key sets differ"

@@ -39,7 +39,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dispatch
-from repro.core.types import EMPTY, AggState, concat_states, empty_state, take
+from repro.core.types import (
+    AggState,
+    concat_states,
+    empty_key,
+    empty_state,
+    take,
+)
 
 _INF = jnp.float32(jnp.inf)
 
@@ -50,13 +56,13 @@ _INF = jnp.float32(jnp.inf)
 
 
 def merge_ranks(a_keys: jax.Array, b_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Output positions of two *sorted* uint32 key vectors in merged order.
+    """Output positions of two *sorted* key vectors in merged order.
 
     ``pos_a[i] = i + |{j : b[j] <  a[i]}|`` and
     ``pos_b[j] = j + |{i : a[i] <= b[j]}|`` — together a permutation of
     ``range(|a|+|b|)`` (stable: ``a`` precedes ``b`` on ties).  EMPTY is
-    the uint32 maximum, so padding naturally ranks to the tail.  No sort
-    primitive is used (see the jaxpr test in tests/test_ordered_index.py).
+    the key dtype's maximum, so padding naturally ranks to the tail.  No
+    sort primitive is used (see the jaxpr test in tests/test_ordered_index.py).
     """
     na, nb = a_keys.shape[0], b_keys.shape[0]
     pos_a = jnp.arange(na, dtype=jnp.int32) + jnp.searchsorted(
@@ -111,7 +117,7 @@ def _segment_ids(sorted_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
     """(head flags, segment index) for a key-sorted vector; EMPTY rows get
     an out-of-range segment so scatters drop them."""
     n = sorted_keys.shape[0]
-    valid = sorted_keys != EMPTY
+    valid = sorted_keys != empty_key(sorted_keys.dtype)
     neq = jnp.concatenate(
         [jnp.ones((1,), dtype=bool), sorted_keys[1:] != sorted_keys[:-1]]
     )
@@ -129,7 +135,8 @@ def segmented_combine_xla(state: AggState) -> AggState:
     """
     n = state.capacity
     heads, seg = _segment_ids(state.keys)
-    out_keys = jnp.full((n,), EMPTY, dtype=jnp.uint32).at[seg].set(
+    kd = state.keys.dtype
+    out_keys = jnp.full((n,), empty_key(kd), dtype=kd).at[seg].set(
         state.keys, mode="drop"
     )
     count = jnp.zeros((n,), jnp.int32).at[seg].add(state.count, mode="drop")
@@ -159,7 +166,7 @@ def _compact_rows(state: AggState, keep: jax.Array) -> AggState:
         return jnp.where(mask, v, fill)
 
     return AggState(
-        keys=take_live(state.keys, jnp.uint32(EMPTY)),
+        keys=take_live(state.keys, empty_key(state.keys.dtype)),
         count=take_live(state.count, 0),
         sum=take_live(state.sum, 0.0),
         min=take_live(state.min, _INF),
@@ -177,7 +184,7 @@ def pair_combine_xla(merged: AggState) -> AggState:
     n = merged.capacity
     if n == 0:
         return merged
-    valid = k != EMPTY
+    valid = k != empty_key(k.dtype)
     same_next = jnp.concatenate([k[1:] == k[:-1], jnp.zeros((1,), bool)]) & valid
     same_prev = jnp.concatenate([jnp.zeros((1,), bool), k[1:] == k[:-1]]) & valid
     heads = valid & ~same_prev
@@ -253,8 +260,10 @@ class OrderedIndex:
 
     # -- constructors ----------------------------------------------------
     @classmethod
-    def empty(cls, capacity: int, width: int) -> "OrderedIndex":
-        return cls(empty_state(capacity, width))
+    def empty(
+        cls, capacity: int, width: int, *, key_dtype=jnp.uint32
+    ) -> "OrderedIndex":
+        return cls(empty_state(capacity, width, key_dtype=key_dtype))
 
     @classmethod
     def wrap(cls, state: AggState) -> "OrderedIndex":

@@ -31,8 +31,12 @@ from repro.core.types import (
     AggState,
     ExecConfig,
     SpillStats,
+    as_key_array,
     concat_states,
+    empty_key,
+    empty_like,
     empty_state,
+    key_dtype_context,
     rows_to_state,
 )
 
@@ -49,19 +53,23 @@ class Run:
 def _absorb_batch(table: AggState, batch_keys, batch_payload, *, backend="xla"):
     """One read-sort-write step: sort/dedupe the batch (paper §5), merge it
     into the ordered index, and report the new occupancy."""
-    batch = sorted_ops.absorb(rows_to_state(batch_keys, batch_payload), backend=backend)
+    batch = sorted_ops.absorb(
+        rows_to_state(batch_keys, batch_payload, widths=table.widths),
+        backend=backend,
+    )
     # table and batch are both duplicate-free ordered indexes: the insert
     # is a linear merge + pair-combine, never a sort.
     merged = sorted_ops.merge_absorb(table, batch, backend=backend, assume_unique=True)
     return merged, merged.occupancy()
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "dedup", "backend"))
-def _sort_chunk(keys, payload, capacity: int, *, dedup: bool, backend="xla"):
+@functools.partial(jax.jit, static_argnames=("capacity", "dedup", "backend", "widths"))
+def _sort_chunk(keys, payload, capacity: int, *, dedup: bool, backend="xla",
+                widths=None):
     """Sort (and optionally dedup) one chunk, padded to the fixed run
     capacity.  Chunks are produced at ≤ capacity rows, so only padding is
     ever needed; trimming would silently drop rows."""
-    state = rows_to_state(keys, payload)
+    state = rows_to_state(keys, payload, widths=widths)
     assert state.capacity <= capacity, (
         f"chunk of {state.capacity} rows exceeds run capacity {capacity}"
     )
@@ -71,7 +79,7 @@ def _sort_chunk(keys, payload, capacity: int, *, dedup: bool, backend="xla"):
         state = sorted_ops.sort_state(state, backend=backend)
     pad = capacity - state.capacity
     if pad > 0:
-        state = concat_states(state, empty_state(pad, state.width))
+        state = concat_states(state, empty_like(state, pad))
     return state, state.occupancy()
 
 
@@ -83,10 +91,19 @@ def _np_chunks(keys: np.ndarray, payload: np.ndarray | None, size: int):
         p = None if payload is None else payload[s:e]
         if k.shape[0] < size:  # fixed shapes: pad the final batch with EMPTY
             padn = size - k.shape[0]
-            k = np.concatenate([k, np.full((padn,), EMPTY, dtype=np.uint32)])
+            k = np.concatenate([k, np.full((padn,), empty_key(k.dtype), dtype=k.dtype)])
             if p is not None:
                 p = np.concatenate([p, np.zeros((padn,) + p.shape[1:], p.dtype)])
         yield k, p
+
+
+def _np_keys(keys: np.ndarray) -> np.ndarray:
+    """Host-side key canonicalization: uint64 is preserved, everything
+    else becomes the legacy uint32."""
+    keys = np.asarray(keys)
+    if keys.dtype != np.uint64:
+        keys = keys.astype(np.uint32)
+    return keys
 
 
 def generate_runs(
@@ -96,6 +113,7 @@ def generate_runs(
     *,
     policy: str = "early_agg",
     backend: str = "xla",
+    widths: tuple[int, int, int] | None = None,
 ) -> tuple[list[Run], AggState | None, SpillStats]:
     """Consume an unsorted input stream; return (runs, resident_table, stats).
 
@@ -104,7 +122,7 @@ def generate_runs(
     completed entirely in memory (paper Fig 6) and the table *is* the
     result.
     """
-    keys = np.asarray(keys, dtype=np.uint32)
+    keys = _np_keys(keys)
     if payload is not None:
         payload = np.asarray(payload, dtype=np.float32)
         if payload.ndim == 1:
@@ -114,50 +132,52 @@ def generate_runs(
     stats = SpillStats()
     runs: list[Run] = []
 
-    if policy in ("traditional", "inrun_dedup"):
-        # memory buffers M raw rows; sort(+dedup) on write.
-        for ck, cp in _np_chunks(keys, payload, M):
-            state, occ = _sort_chunk(
-                jnp.asarray(ck), None if cp is None else jnp.asarray(cp),
-                M, dedup=(policy == "inrun_dedup"), backend=backend,
-            )
-            length = int(occ)
-            runs.append(Run(state=state, length=length))
-            stats.rows_spilled_run_generation += length
+    with key_dtype_context(keys):
+        if policy in ("traditional", "inrun_dedup"):
+            # memory buffers M raw rows; sort(+dedup) on write.
+            for ck, cp in _np_chunks(keys, payload, M):
+                state, occ = _sort_chunk(
+                    as_key_array(ck), None if cp is None else jnp.asarray(cp),
+                    M, dedup=(policy == "inrun_dedup"), backend=backend,
+                    widths=widths,
+                )
+                length = int(occ)
+                runs.append(Run(state=state, length=length))
+                stats.rows_spilled_run_generation += length
+                stats.runs_generated += 1
+            return runs, None, stats
+
+        if policy != "early_agg":
+            raise ValueError(f"unknown run-generation policy {policy!r}")
+
+        # --- early aggregation: ordered in-memory index absorbs duplicates ---
+        table = empty_state(M, width, key_dtype=keys.dtype, widths=widths)
+        for ck, cp in _np_chunks(keys, payload, B):
+            merged, occ = _absorb_batch(
+                table, as_key_array(ck), None if cp is None else jnp.asarray(cp),
+                backend=backend,
+            )  # capacity M + B
+            n = int(occ)
+            if n > M:
+                # memory full: write the entire index content as one sorted run
+                # (read-sort-write cycle; runs ≈ M *unique* rows, paper §5).
+                runs.append(Run(state=merged, length=n))
+                stats.rows_spilled_run_generation += n
+                stats.runs_generated += 1
+                table = empty_state(M, width, key_dtype=keys.dtype, widths=widths)
+            else:
+                table = jax.tree.map(lambda x: x[: M], merged)  # trim back to M
+
+        if not runs:
+            return [], table, stats
+        # flush the final partial run
+        occ = int(table.occupancy())
+        if occ > 0:
+            pad = empty_like(table, B)
+            runs.append(Run(state=concat_states(table, pad), length=occ))
+            stats.rows_spilled_run_generation += occ
             stats.runs_generated += 1
         return runs, None, stats
-
-    if policy != "early_agg":
-        raise ValueError(f"unknown run-generation policy {policy!r}")
-
-    # --- early aggregation: ordered in-memory index absorbs duplicates ---
-    table = empty_state(M, width)
-    for ck, cp in _np_chunks(keys, payload, B):
-        merged, occ = _absorb_batch(
-            table, jnp.asarray(ck), None if cp is None else jnp.asarray(cp),
-            backend=backend,
-        )  # capacity M + B
-        n = int(occ)
-        if n > M:
-            # memory full: write the entire index content as one sorted run
-            # (read-sort-write cycle; runs ≈ M *unique* rows, paper §5).
-            runs.append(Run(state=merged, length=n))
-            stats.rows_spilled_run_generation += n
-            stats.runs_generated += 1
-            table = empty_state(M, width)
-        else:
-            table = jax.tree.map(lambda x: x[: M], merged)  # trim back to M
-
-    if not runs:
-        return [], table, stats
-    # flush the final partial run
-    occ = int(table.occupancy())
-    if occ > 0:
-        pad = empty_state(B, width)
-        runs.append(Run(state=concat_states(table, pad), length=occ))
-        stats.rows_spilled_run_generation += occ
-        stats.runs_generated += 1
-    return runs, None, stats
 
 
 # ---------------------------------------------------------------------------
@@ -180,7 +200,7 @@ def generate_runs(
 
 def _mask_state(state: AggState, keep) -> AggState:
     return AggState(
-        keys=jnp.where(keep, state.keys, jnp.uint32(EMPTY)),
+        keys=jnp.where(keep, state.keys, empty_key(state.keys.dtype)),
         count=jnp.where(keep, state.count, 0),
         sum=jnp.where(keep[:, None], state.sum, 0.0),
         min=jnp.where(keep[:, None], state.min, jnp.float32(jnp.inf)),
@@ -190,8 +210,10 @@ def _mask_state(state: AggState, keep) -> AggState:
 
 @functools.partial(jax.jit, static_argnames=("backend",))
 def _rs_absorb(run_table, next_table, frontier, bkeys, bpay, *, backend="xla"):
-    batch = sorted_ops.absorb(rows_to_state(bkeys, bpay), backend=backend)
-    valid = batch.keys != EMPTY
+    batch = sorted_ops.absorb(
+        rows_to_state(bkeys, bpay, widths=run_table.widths), backend=backend
+    )
+    valid = batch.keys != empty_key(batch.keys.dtype)
     # the sorted batch splits at the frontier into a `lo` prefix and a
     # `hi` suffix; masking keeps `lo` sorted as-is, while `hi` must be
     # rolled left past the masked prefix to restore the sorted/EMPTY-
@@ -221,8 +243,9 @@ def _rs_evict(run_table, quantum: int, *, backend="xla"):
     rest = jax.tree.map(lambda x: jnp.take(x, src, axis=0), run_table)
     live = jnp.arange(cap) < jnp.maximum(run_table.occupancy() - quantum, 0)
     rest = _mask_state(rest, live)
-    valid = evicted.keys != EMPTY
-    frontier = jnp.max(jnp.where(valid, evicted.keys, jnp.uint32(0)))
+    kd = evicted.keys.dtype
+    valid = evicted.keys != empty_key(kd)
+    frontier = jnp.max(jnp.where(valid, evicted.keys, jnp.zeros((), kd)))
     n_evicted = jnp.sum(valid.astype(jnp.int32))
     return evicted, rest, frontier, n_evicted
 
@@ -233,13 +256,14 @@ def generate_runs_rs(
     cfg: ExecConfig,
     *,
     backend: str = "xla",
+    widths: tuple[int, int, int] | None = None,
 ) -> tuple[list[Run], AggState | None, SpillStats]:
     """Replacement-selection run generation with early aggregation (§3.3).
 
     Returns (runs, resident_table_if_no_spill, stats).  Runs approach 2M
     rows for random input; absorption continues at ~M/O throughout.
     """
-    keys = np.asarray(keys, dtype=np.uint32)
+    keys = _np_keys(keys)
     if payload is not None:
         payload = np.asarray(payload, dtype=np.float32)
         if payload.ndim == 1:
@@ -249,9 +273,19 @@ def generate_runs_rs(
     cap = M + 2 * B
     stats = SpillStats()
     runs: list[Run] = []
-    run_table = empty_state(cap, width)
-    next_table = empty_state(cap, width)
-    frontier = jnp.uint32(0)
+    with key_dtype_context(keys):
+        return _generate_runs_rs_body(
+            keys, payload, cfg, backend=backend, widths=widths,
+            width=width, cap=cap, stats=stats, runs=runs,
+        )
+
+
+def _generate_runs_rs_body(keys, payload, cfg, *, backend, widths, width, cap,
+                           stats, runs):
+    M, B = cfg.memory_rows, cfg.batch_rows
+    run_table = empty_state(cap, width, key_dtype=keys.dtype, widths=widths)
+    next_table = empty_state(cap, width, key_dtype=keys.dtype, widths=widths)
+    frontier = jnp.zeros((), keys.dtype)
     open_chunks: list[AggState] = []  # evicted pieces of the open run
     open_len = 0
 
@@ -266,7 +300,7 @@ def generate_runs_rs(
 
     for ck, cp in _np_chunks(keys, payload, B):
         run_table, next_table, occ_r, occ_n = _rs_absorb(
-            run_table, next_table, frontier, jnp.asarray(ck),
+            run_table, next_table, frontier, as_key_array(ck),
             None if cp is None else jnp.asarray(cp), backend=backend,
         )
         occ_r, occ_n = int(occ_r), int(occ_n)
@@ -274,8 +308,8 @@ def generate_runs_rs(
             if occ_r == 0:
                 # open run exhausted: close it, promote the next partition
                 close_run()
-                run_table, next_table = next_table, empty_state(cap, width)
-                frontier = jnp.uint32(0)
+                run_table, next_table = next_table, empty_like(next_table, cap)
+                frontier = jnp.zeros((), keys.dtype)
                 occ_r, occ_n = occ_n, 0
                 continue
             evicted, run_table, frontier, n_ev = _rs_evict(run_table, B, backend=backend)

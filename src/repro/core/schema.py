@@ -1,0 +1,508 @@
+"""Schema front door: composite keys, declarative aggregates, and the
+single ``aggregate()`` entry point.
+
+The paper's thesis is that one sort-based algorithm can serve as a
+system's *only* aggregation operator.  This module is the API rendering
+of that thesis: instead of per-algorithm functions over a hard-wired
+``uint32`` key and a fixed count/sum/min/max accumulator, callers
+describe
+
+* **what the key is** — :class:`KeySpec`, an ordered list of named
+  integer key columns with bit widths, packed most-significant-first
+  into ONE machine sort key (``uint32`` when ≤ 32 total bits, else
+  ``uint64``).  Packing most-significant-first makes the single sort
+  realize the lexicographic ordering of the column list, which is what
+  lets the engine exploit *interesting orderings* generically: any
+  prefix of the column list is sorted for free (Guravannavar et al.'s
+  order-enforcement payoff), and rollup over any hierarchy needs one
+  sort (§2.2).
+* **what to compute** — :class:`AggSpec`, the requested aggregates
+  (count, sum, min, max, plus finalizers like avg).  The engine's
+  :class:`~repro.core.types.AggState` then carries only the value
+  planes the request needs: ``AggSpec("count")`` drops all three float
+  planes from every kernel and every spilled run.
+
+``aggregate()`` routes through the backend registry
+(:mod:`repro.core.dispatch`) and the analytic cost model
+(:mod:`repro.core.cost_model`), and returns an :class:`AggResult` whose
+relation is sorted by the composite key — `group_by`, `distinct`,
+`rollup`, … in :mod:`repro.core.operators` are thin wrappers.
+
+64-bit keys on the host are plain NumPy ``uint64``; device computation
+runs inside :func:`repro.core.types.key_dtype_context`, and the Pallas
+kernels compare them as a (hi, lo) pair of uint32 lanes — no native
+64-bit ops on the TPU path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model
+from repro.core import dispatch
+from repro.core import hash_agg as hash_mod
+from repro.core import insort as insort_mod
+from repro.core import sorted_ops
+from repro.core.types import (
+    AggState,
+    ExecConfig,
+    SpillStats,
+    empty_key,
+    key_dtype_context,
+    key_dtype_for_bits,
+    max_key,
+)
+
+
+# ---------------------------------------------------------------------------
+# KeySpec — composite sort keys
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyColumn:
+    """One named integer key column occupying ``bits`` bits of the packed
+    key.  Values must lie in ``[0, 2**bits)``."""
+
+    name: str
+    bits: int
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("key column needs a name")
+        if not 1 <= self.bits <= 64:
+            raise ValueError(f"column {self.name!r}: bits must be in [1, 64]")
+
+    @property
+    def max_value(self) -> int:
+        return (1 << self.bits) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class KeySpec:
+    """An ordered list of key columns, major (most significant) first.
+
+    ``KeySpec.of(year=23, month=4, day=5)`` packs ``(year << 9) |
+    (month << 5) | day`` into a uint32; totals over 32 bits widen to
+    uint64 (the paper's composite keys stop competing for 32 bits).  The
+    packed EMPTY sentinel (all ones) is reserved: the all-max column
+    combination is rejected by :meth:`pack`.
+    """
+
+    columns: tuple[KeyColumn, ...]
+
+    def __post_init__(self):
+        if not self.columns:
+            raise ValueError("KeySpec needs at least one column")
+        names = [c.name for c in self.columns]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate key column names: {names}")
+        if self.total_bits > 64:
+            raise ValueError(
+                f"composite key needs {self.total_bits} bits; the engine "
+                "supports at most 64"
+            )
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def of(cls, **bits_by_name: int) -> "KeySpec":
+        """``KeySpec.of(year=23, month=4, day=5)`` — order is significance
+        order, major first (Python keeps kwargs ordered)."""
+        return cls(tuple(KeyColumn(n, b) for n, b in bits_by_name.items()))
+
+    # -- properties ------------------------------------------------------
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(c.name for c in self.columns)
+
+    @property
+    def total_bits(self) -> int:
+        return sum(c.bits for c in self.columns)
+
+    @property
+    def key_dtype(self) -> np.dtype:
+        return key_dtype_for_bits(self.total_bits)
+
+    @property
+    def empty(self) -> np.unsignedinteger:
+        return empty_key(self.key_dtype)
+
+    @property
+    def max_packed(self) -> np.unsignedinteger:
+        return max_key(self.key_dtype)
+
+    def shift_of(self, name: str) -> int:
+        """Bit position of a column's least-significant bit in the packed key."""
+        shift = 0
+        for c in reversed(self.columns):
+            if c.name == name:
+                return shift
+            shift += c.bits
+        raise KeyError(f"no key column {name!r} in {self.names}")
+
+    def prefix(self, n: int) -> "KeySpec":
+        """The KeySpec of the first (most significant) ``n`` columns."""
+        if not 1 <= n <= len(self.columns):
+            raise ValueError(f"prefix length {n} not in [1, {len(self.columns)}]")
+        return KeySpec(self.columns[:n])
+
+    # -- packing ---------------------------------------------------------
+    def _as_columns(self, columns) -> list[np.ndarray]:
+        if isinstance(columns, Mapping):
+            missing = [n for n in self.names if n not in columns]
+            if missing:
+                raise KeyError(f"missing key columns: {missing}")
+            cols = [columns[n] for n in self.names]
+        else:
+            cols = list(columns)
+            if len(cols) != len(self.columns):
+                raise ValueError(
+                    f"expected {len(self.columns)} key columns, got {len(cols)}"
+                )
+        return [np.asarray(c) for c in cols]
+
+    def pack(self, columns, *, validate: bool = True) -> np.ndarray:
+        """Pack named columns (mapping or significance-ordered sequence)
+        into one sort-key vector of :attr:`key_dtype`.
+
+        Packing happens host-side in NumPy — uint64 needs no JAX x64
+        flag here.  ``validate=True`` checks every column against its bit
+        budget and rejects the reserved EMPTY bit pattern.
+        """
+        cols = self._as_columns(columns)
+        out = np.zeros(cols[0].shape, dtype=np.uint64)
+        for spec, col in zip(self.columns, cols):
+            col = col.astype(np.uint64)
+            if validate and col.size and int(col.max()) > spec.max_value:
+                raise ValueError(
+                    f"column {spec.name!r} exceeds its {spec.bits}-bit budget "
+                    f"(max value {int(col.max())} > {spec.max_value})"
+                )
+            out = (out << np.uint64(spec.bits)) | col
+        packed = out.astype(self.key_dtype)
+        if validate and packed.size and bool((packed == self.empty).any()):
+            raise ValueError(
+                "the all-ones column combination packs to the reserved EMPTY "
+                "sentinel; reduce a column's max value or widen a column"
+            )
+        return packed
+
+    def unpack(self, keys) -> dict[str, np.ndarray]:
+        """Packed keys → named columns (EMPTY rows map to all-max columns)."""
+        keys = np.asarray(keys).astype(np.uint64)
+        out: dict[str, np.ndarray] = {}
+        shift = 0
+        for c in reversed(self.columns):
+            mask = np.uint64((1 << c.bits) - 1)
+            out[c.name] = ((keys >> np.uint64(shift)) & mask).astype(
+                np.uint32 if c.bits <= 32 else np.uint64
+            )
+            shift += c.bits
+        return {n: out[n] for n in self.names}
+
+
+# ---------------------------------------------------------------------------
+# AggSpec — declarative aggregates
+# ---------------------------------------------------------------------------
+
+_FINALIZERS = {"avg": ("sum", "count")}
+_STORED = ("count", "sum", "min", "max")
+_KNOWN = set(_STORED) | set(_FINALIZERS)
+
+
+@dataclasses.dataclass(frozen=True)
+class AggSpec:
+    """The requested aggregates: any of count/sum/min/max plus finalizers
+    (currently ``avg`` = sum/count).  The stored accumulator carries only
+    the value planes the request needs — ``AggSpec("count")`` spills no
+    float columns at all."""
+
+    names: tuple[str, ...]
+
+    def __init__(self, *names: str):
+        if len(names) == 1 and isinstance(names[0], (tuple, list)):
+            names = tuple(names[0])
+        if not names:
+            names = ("count",)
+        unknown = [n for n in names if n not in _KNOWN]
+        if unknown:
+            raise ValueError(f"unknown aggregates {unknown}; known: {sorted(_KNOWN)}")
+        object.__setattr__(self, "names", tuple(dict.fromkeys(names)))
+
+    @property
+    def stored(self) -> tuple[str, ...]:
+        """Accumulator fields needed (requested + finalizer inputs)."""
+        need = set()
+        for n in self.names:
+            need.update(_FINALIZERS.get(n, (n,)))
+        return tuple(n for n in _STORED if n in need or n == "count")
+
+    def plane_widths(self, payload_width: int) -> tuple[int, int, int]:
+        """(sum, min, max) plane widths for a V-wide payload."""
+        stored = self.stored
+        return (
+            payload_width if "sum" in stored else 0,
+            payload_width if "min" in stored else 0,
+            payload_width if "max" in stored else 0,
+        )
+
+    def needs_payload(self) -> bool:
+        return any(w for w in self.plane_widths(1))
+
+    def finalize(self, state: AggState) -> dict[str, Any]:
+        """Accumulator → the requested user-facing aggregate columns."""
+        valid = state.valid()
+        out: dict[str, Any] = {}
+        for n in self.names:
+            if n == "count":
+                out["count"] = state.count
+            elif n == "sum":
+                out["sum"] = state.sum
+            elif n == "min":
+                out["min"] = jnp.where(valid[:, None], state.min, 0.0)
+            elif n == "max":
+                out["max"] = jnp.where(valid[:, None], state.max, 0.0)
+            elif n == "avg":
+                c = jnp.maximum(state.count, 1).astype(jnp.float32)[:, None]
+                out["avg"] = state.sum / c
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the front door
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AggResult:
+    """Sorted result relation of :func:`aggregate`.
+
+    ``state`` is the raw accumulator (keys sorted ascending, EMPTY-padded
+    tail); ``relation()`` unpacks it into named key columns + the
+    requested aggregate columns, dropping the padding.
+    """
+
+    state: AggState
+    stats: SpillStats
+    by: KeySpec
+    aggs: AggSpec
+    plan: dict[str, Any]
+
+    @property
+    def keys(self):
+        return self.state.keys
+
+    def occupancy(self) -> int:
+        return int(self.state.occupancy())
+
+    def relation(self) -> dict[str, np.ndarray]:
+        """Named key columns + aggregate columns, padding removed, rows
+        sorted by the composite key (major column first)."""
+        keys = np.asarray(self.state.keys)
+        # mask with the STATE's sentinel: a rollup prefix level may carry a
+        # narrower KeySpec (≤32 bits) over a still-uint64 engine state
+        mask = keys != empty_key(keys.dtype)
+        out = {n: c[mask] for n, c in self.by.unpack(keys).items()}
+        for name, col in self.aggs.finalize(self.state).items():
+            out[name] = np.asarray(col)[mask]
+        return out
+
+
+def _resolve_order_by(order_by, by: KeySpec) -> bool:
+    """order_by must be a prefix of the key columns (satisfiable from the
+    one sort); returns whether sorted output is required."""
+    if order_by is None or order_by is False:
+        return False
+    if order_by is True:
+        return True
+    names = (order_by,) if isinstance(order_by, str) else tuple(order_by)
+    if names != by.names[: len(names)]:
+        raise ValueError(
+            f"order_by {names} is not a prefix of the key columns {by.names}; "
+            "one sort cannot satisfy it — reorder the KeySpec"
+        )
+    return True
+
+
+def _plan(n_rows: int, cfg: ExecConfig, output_estimate: int | None) -> dict:
+    """Optimizer-style cost comparison (paper Fig 23/24): predicted spill
+    volumes for the in-sort operator and the hash baseline.  The paper's
+    point — and this function's — is that in-sort aggregation is never
+    worse, so ``algorithm="auto"`` is always in-sort; the numbers are
+    surfaced for inspection."""
+    O = output_estimate or cfg.memory_rows * cfg.fanin
+    insort_cb = cost_model.simulate_insort(
+        n_rows, O, cfg.memory_rows, cfg.fanin,
+        early_aggregation=True, wide_merge=True, replacement_selection=True,
+    )
+    hash_cb = cost_model.simulate_hash(
+        n_rows, O, cfg.memory_rows, cfg.fanin, hybrid=True
+    )
+    return {
+        "input_rows": n_rows,
+        "output_estimate": O,
+        "in_memory": n_rows <= cfg.memory_rows,
+        "predicted_spill_insort": insort_cb.total_spill,
+        "predicted_spill_hash": hash_cb.total_spill,
+    }
+
+
+def aggregate(
+    columns,
+    *,
+    by: KeySpec,
+    values=None,
+    aggs: AggSpec | Sequence[str] | str = ("count",),
+    order_by=None,
+    algorithm: str = "auto",
+    backend: str = "auto",
+    cfg: ExecConfig | None = None,
+    output_estimate: int | None = None,
+) -> AggResult:
+    """Duplicate removal / grouping / aggregation behind one front door.
+
+    ``columns``: mapping of key-column name → integer vector (or a
+    significance-ordered sequence), packed per ``by``.  ``values``: the
+    optional V-wide float payload the aggregates run over.  ``aggs``
+    names the requested aggregates; the accumulator carries only what
+    they need.  ``order_by`` (True, or a prefix of ``by``'s column
+    names) asserts the result must be key-sorted — free for the
+    sort-based algorithms, an extra sort for the hash baselines.
+
+    ``algorithm``: ``"auto"`` (the paper's systems-only choice: in-sort),
+    ``"insort"``, ``"hash"``, ``"f1_hash"``, ``"sort_then_stream"``, or
+    ``"inmemory"``.  ``backend``: ``"auto" | "xla" | "pallas"`` through
+    the dispatch registry.
+    """
+    cfg = cfg or ExecConfig()
+    if not isinstance(aggs, AggSpec):
+        aggs = AggSpec(aggs) if isinstance(aggs, str) else AggSpec(*aggs)
+    packed = by.pack(columns)
+    want_sorted = _resolve_order_by(order_by, by)
+    if values is not None:
+        values = np.asarray(values, dtype=np.float32)
+        if values.ndim == 1:
+            values = values[:, None]
+        widths = aggs.plane_widths(values.shape[1])
+        if not any(widths):
+            values = None  # nothing requested needs the payload
+            widths = (0, 0, 0)
+    else:
+        widths = (0, 0, 0)
+        if aggs.needs_payload():
+            raise ValueError(
+                f"aggregates {aggs.names} need a payload; pass values=..."
+            )
+    plan = _plan(len(packed), cfg, output_estimate)
+    backend = dispatch.resolve_backend_name(backend)
+    plan["backend"] = backend
+
+    sort_based = algorithm in ("auto", "insort", "sort_then_stream", "inmemory")
+    plan["algorithm"] = "insort" if algorithm == "auto" else algorithm
+    with key_dtype_context(by.key_dtype):
+        if algorithm in ("auto", "insort"):
+            state, stats = insort_mod.insort_aggregate(
+                packed, values, cfg, output_estimate=output_estimate,
+                backend=backend, widths=widths,
+            )
+        elif algorithm == "sort_then_stream":
+            state, stats = insort_mod.sort_then_stream_aggregate(
+                packed, values, cfg, backend=backend
+            )
+        elif algorithm == "hash":
+            state, stats = hash_mod.hash_aggregate(
+                packed, values, cfg, output_estimate=output_estimate,
+                backend=backend, widths=widths,
+            )
+        elif algorithm == "f1_hash":
+            state, stats = hash_mod.f1_hash_aggregate(
+                packed, values, cfg, backend=backend, widths=widths
+            )
+        elif algorithm == "inmemory":
+            state = sorted_ops.sorted_groupby(
+                packed, values, backend=backend, widths=widths
+            )
+            stats = SpillStats()
+        else:
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        if want_sorted and not sort_based:
+            # hash order → key order: the extra sort the paper's operator
+            # never pays (Fig 19)
+            state = sorted_ops.sort_state(state, backend=backend)
+    return AggResult(state=state, stats=stats, by=by, aggs=aggs, plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# generic rollup: any prefix hierarchy, all levels from ONE sort
+# ---------------------------------------------------------------------------
+
+
+def rollup(
+    columns,
+    *,
+    by: KeySpec,
+    values=None,
+    aggs: AggSpec | Sequence[str] | str = ("count", "sum"),
+    levels: Sequence[int] | None = None,
+    algorithm: str = "auto",
+    backend: str = "auto",
+    cfg: ExecConfig | None = None,
+    output_estimate: int | None = None,
+) -> tuple[dict[tuple[str, ...], AggResult], SpillStats]:
+    """``GROUP BY ROLLUP(...)`` over any key hierarchy from ONE sort (§2.2).
+
+    Aggregates at the full key, then peels minor columns off the sorted
+    output: dropping the least-significant column is a right-shift, which
+    is monotone on the packed key, so every coarser level is a
+    segmented combine of the (already sorted) finer level — no further
+    sort, no extra spill.  ``levels`` selects prefix lengths (default:
+    every prefix plus the grand total, which reports as ``()``).
+
+    Returns ({prefix column names: AggResult}, stats of the one sort).
+    """
+    cfg = cfg or ExecConfig()
+    if not isinstance(aggs, AggSpec):
+        aggs = AggSpec(aggs) if isinstance(aggs, str) else AggSpec(*aggs)
+    n_cols = len(by.columns)
+    if levels is None:
+        levels = list(range(n_cols, -1, -1))
+    requested = sorted(set(int(l) for l in levels), reverse=True)
+    if requested[0] > n_cols or requested[-1] < 0:
+        raise ValueError(f"rollup levels {requested} out of range [0, {n_cols}]")
+    levels = requested
+
+    fine = aggregate(
+        columns, by=by, values=values, aggs=aggs, algorithm=algorithm,
+        backend=backend, cfg=cfg, output_estimate=output_estimate,
+        order_by=True,  # the peel below requires key-sorted input (hash
+        # algorithms pay their post-sort here, Fig 19 style)
+    )
+    out: dict[tuple[str, ...], AggResult] = {}
+    state = fine.state
+    spec = by
+    cur = n_cols
+    with key_dtype_context(by.key_dtype):
+        for lvl in levels:
+            while cur > lvl:
+                # peel the minor column: shift is monotone ⇒ stays sorted
+                dropped = spec.columns[-1]
+                spec = KeySpec(spec.columns[:-1]) if cur > 1 else spec
+                shifted = state.keys >> state.keys.dtype.type(dropped.bits)
+                sentinel = empty_key(state.keys.dtype)
+                if cur == 1:
+                    # grand total: a single all-rows group under key 0
+                    spec = KeySpec((KeyColumn("__all__", 1),))
+                    shifted = jnp.zeros_like(state.keys)
+                keys2 = jnp.where(state.valid(), shifted, sentinel)
+                state = sorted_ops.segmented_combine(
+                    AggState(keys2, state.count, state.sum, state.min, state.max),
+                    backend=backend,
+                )
+                cur -= 1
+            out[by.names[:lvl]] = AggResult(
+                state=state, stats=fine.stats, by=spec, aggs=aggs, plan=fine.plan
+            )
+    return out, fine.stats

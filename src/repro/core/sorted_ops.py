@@ -33,7 +33,12 @@ import jax.numpy as jnp
 
 from repro.core import dispatch
 from repro.core.ordered_index import OrderedIndex  # noqa: F401  (re-export)
-from repro.core.types import EMPTY, AggState, rows_to_state, take
+from repro.core.types import (
+    AggState,
+    key_dtype_context,
+    rows_to_state,
+    take,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -41,10 +46,12 @@ from repro.core.types import EMPTY, AggState, rows_to_state, take
 # ---------------------------------------------------------------------------
 
 
-def sort_state(state: AggState, *, backend: str = "xla") -> AggState:
-    """Key-sort all rows of a state; EMPTY (=uint32 max) rows sink to the end."""
-    perm = dispatch.get_backend(backend).argsort(state.keys)
-    return take(state, perm)
+def sort_state(state: AggState, *, backend: str = "auto") -> AggState:
+    """Key-sort all rows of a state; EMPTY (=key dtype max) rows sink to
+    the end."""
+    with key_dtype_context(state):
+        perm = dispatch.get_backend(backend).argsort(state.keys)
+        return take(state, perm)
 
 
 # ---------------------------------------------------------------------------
@@ -52,7 +59,7 @@ def sort_state(state: AggState, *, backend: str = "xla") -> AggState:
 # ---------------------------------------------------------------------------
 
 
-def segmented_combine(state: AggState, *, backend: str = "xla") -> AggState:
+def segmented_combine(state: AggState, *, backend: str = "auto") -> AggState:
     """Combine adjacent equal-key rows of a key-sorted state.
 
     Output keeps the input capacity: unique groups are compacted to the
@@ -60,10 +67,11 @@ def segmented_combine(state: AggState, *, backend: str = "xla") -> AggState:
     equivalent of inserting a sorted batch into the paper's b-tree and
     letting existing keys absorb the new rows.
     """
-    return dispatch.get_backend(backend).segmented_combine(state)
+    with key_dtype_context(state):
+        return dispatch.get_backend(backend).segmented_combine(state)
 
 
-def absorb(state: AggState, *, backend: str = "xla") -> AggState:
+def absorb(state: AggState, *, backend: str = "auto") -> AggState:
     """sort + combine: canonicalize any state to sorted/compacted form."""
     return segmented_combine(sort_state(state, backend=backend), backend=backend)
 
@@ -72,7 +80,7 @@ def merge_absorb(
     table: AggState,
     incoming: AggState,
     *,
-    backend: str = "xla",
+    backend: str = "auto",
     assume_unique: bool = False,
 ) -> AggState:
     """Batched insert of ``incoming`` into the ordered index ``table``.
@@ -88,13 +96,14 @@ def merge_absorb(
     (the OrderedIndex invariant): merged groups then hold at most two
     rows and the absorb drops to a single pair-combine.
     """
-    return dispatch.get_backend(backend).merge_sorted(
-        table, incoming, assume_unique=assume_unique
-    )
+    with key_dtype_context(table):
+        return dispatch.get_backend(backend).merge_sorted(
+            table, incoming, assume_unique=assume_unique
+        )
 
 
 def merge_absorb_many(
-    states: list[AggState], *, backend: str = "xla", assume_unique: bool = False
+    states: list[AggState], *, backend: str = "auto", assume_unique: bool = False
 ) -> AggState:
     """Balanced tree of linear merges over already-sorted states (the
     multi-fragment absorb used by the distributed group-by and the hash
@@ -119,14 +128,27 @@ def merge_absorb_many(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
-def sorted_groupby(keys: jax.Array, payload: jax.Array | None = None, *, backend: str = "xla") -> AggState:
+@functools.partial(jax.jit, static_argnames=("backend", "widths"))
+def _sorted_groupby_jit(keys, payload, *, backend: str, widths):
+    return absorb(rows_to_state(keys, payload, widths=widths), backend=backend)
+
+
+def sorted_groupby(
+    keys: jax.Array,
+    payload: jax.Array | None = None,
+    *,
+    backend: str = "auto",
+    widths: tuple[int, int, int] | None = None,
+) -> AggState:
     """One-shot device group-by: the `O ≤ M` case of the paper (Fig 6).
 
     Sorted output comes for free — the "interesting orderings" property the
-    paper leans on for group-by + order-by fusion.
+    paper leans on for group-by + order-by fusion.  ``widths`` restricts
+    which value planes the result carries (see
+    :class:`repro.core.schema.AggSpec`).
     """
-    return absorb(rows_to_state(keys, payload), backend=backend)
+    with key_dtype_context(keys):
+        return _sorted_groupby_jit(keys, payload, backend=backend, widths=widths)
 
 
 def unique_count(state: AggState) -> jax.Array:

@@ -5,17 +5,27 @@ The paper's operators consume streams of (key, payload) rows and produce
 fixed-shape representation so that sort-based, hash-based, and in-stream
 aggregation are interchangeable and bit-comparable:
 
-* keys are ``uint32``; the sentinel ``EMPTY = 0xFFFF_FFFF`` marks unused
-  slots and conveniently sorts to the end, which is how fixed-capacity
-  "memory" tiles model the paper's variable-occupancy b-tree.
+* keys are ``uint32`` or ``uint64`` (the *key dtype* travels with the
+  arrays); the per-dtype sentinel ``EMPTY`` (the dtype's maximum) marks
+  unused slots and conveniently sorts to the end, which is how
+  fixed-capacity "memory" tiles model the paper's variable-occupancy
+  b-tree.  64-bit keys exist so composite grouping keys (see
+  :mod:`repro.core.schema`) stop competing for 32 bits; on the host they
+  are plain NumPy ``uint64``, and any jnp computation over them must run
+  inside :func:`key_dtype_context` (which enables JAX x64 only for that
+  scope — the Pallas kernels instead compare 64-bit keys as a (hi, lo)
+  pair of uint32 lanes and never need native 64-bit ops).
 * the aggregate state is a struct-of-arrays ``AggState`` carrying
   count / sum / min / max over a ``V``-wide float payload (``V = 0`` for
-  pure duplicate removal).  ``avg`` etc. are finalizers over this state,
-  matching the paper's note (§3.3) that the in-memory row format differs
-  from both input and output formats.
+  pure duplicate removal).  Each value plane may independently be absent
+  (width 0) so an :class:`repro.core.schema.AggSpec` can request e.g.
+  count+sum without paying for min/max.  ``avg`` etc. are finalizers over
+  this state, matching the paper's note (§3.3) that the in-memory row
+  format differs from both input and output formats.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
@@ -27,7 +37,76 @@ EMPTY = np.uint32(0xFFFFFFFF)
 # Largest key a user may supply (EMPTY is reserved).
 MAX_KEY = np.uint32(0xFFFFFFFE)
 
+# 64-bit twins of the sentinels (composite keys wider than 32 bits).
+EMPTY64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+MAX_KEY64 = np.uint64(0xFFFFFFFFFFFFFFFE)
+
+KEY_DTYPES = (np.dtype(np.uint32), np.dtype(np.uint64))
+
 _F32_INF = np.float32(np.inf)
+
+
+def empty_key(dtype) -> np.unsignedinteger:
+    """The EMPTY sentinel for a key dtype (its maximum value)."""
+    dtype = np.dtype(dtype)
+    if dtype == np.uint32:
+        return EMPTY
+    if dtype == np.uint64:
+        return EMPTY64
+    raise TypeError(f"unsupported key dtype {dtype}; expected one of {KEY_DTYPES}")
+
+
+def max_key(dtype) -> np.unsignedinteger:
+    """Largest user-suppliable key for a key dtype (EMPTY is reserved)."""
+    dtype = np.dtype(dtype)
+    if dtype == np.uint32:
+        return MAX_KEY
+    if dtype == np.uint64:
+        return MAX_KEY64
+    raise TypeError(f"unsupported key dtype {dtype}; expected one of {KEY_DTYPES}")
+
+
+def key_dtype_for_bits(bits: int):
+    """Smallest supported key dtype holding ``bits`` key bits."""
+    if bits <= 32:
+        return np.dtype(np.uint32)
+    if bits <= 64:
+        return np.dtype(np.uint64)
+    raise ValueError(f"composite keys are limited to 64 bits, got {bits}")
+
+
+def _dtype_of(x) -> np.dtype:
+    if hasattr(x, "keys"):  # AggState / OrderedIndex
+        x = x.keys
+    try:
+        return np.dtype(x)  # dtype objects, scalar types, dtype names
+    except TypeError:
+        return np.dtype(x.dtype)  # arrays / scalars
+
+
+def key_dtype_context(x):
+    """Context manager required around jnp computation on 64-bit keys.
+
+    JAX canonicalizes 64-bit types away unless x64 is enabled; enabling it
+    globally would change dtype semantics for the whole process (models,
+    optimizers, …).  This scopes ``jax.experimental.enable_x64`` to the
+    engine call operating on uint64 keys and is a no-op for uint32.
+    Accepts an array, an AggState, or a dtype.
+    """
+    if _dtype_of(x) == np.uint64:
+        from jax.experimental import enable_x64
+
+        return enable_x64()
+    return contextlib.nullcontext()
+
+
+def as_key_array(keys) -> jax.Array:
+    """Lift user keys to a jnp key vector, preserving uint64, casting
+    everything else to the legacy uint32."""
+    dtype = _dtype_of(keys)
+    if dtype == np.uint64:
+        return jnp.asarray(keys, dtype=jnp.uint64)  # caller holds the context
+    return jnp.asarray(keys).astype(jnp.uint32)
 
 
 @jax.tree_util.register_dataclass
@@ -35,11 +114,15 @@ _F32_INF = np.float32(np.inf)
 class AggState:
     """Struct-of-arrays aggregate accumulator.
 
-    ``keys``   (N,)    uint32, EMPTY marks invalid rows.
+    ``keys``   (N,)    uint32 or uint64, EMPTY (dtype max) marks invalid rows.
     ``count``  (N,)    int64-safe int32 group cardinalities.
-    ``sum``    (N, V)  float32 running sums.
-    ``min``    (N, V)  float32 running minima (+inf for invalid).
-    ``max``    (N, V)  float32 running maxima (-inf for invalid).
+    ``sum``    (N, Vs) float32 running sums.
+    ``min``    (N, Vm) float32 running minima (+inf for invalid).
+    ``max``    (N, Vx) float32 running maxima (-inf for invalid).
+
+    The value planes usually share one width V, but any of them may be
+    width 0 when the requested aggregates don't need it (see
+    :class:`repro.core.schema.AggSpec`).
     """
 
     keys: jax.Array
@@ -54,43 +137,87 @@ class AggState:
 
     @property
     def width(self) -> int:
-        return self.sum.shape[1]
+        """The payload width V (max over the carried value planes)."""
+        return max(self.widths)
+
+    @property
+    def widths(self) -> tuple[int, int, int]:
+        """Per-plane widths (sum, min, max)."""
+        return (self.sum.shape[1], self.min.shape[1], self.max.shape[1])
+
+    @property
+    def key_dtype(self) -> np.dtype:
+        return np.dtype(self.keys.dtype)
 
     def valid(self) -> jax.Array:
-        return self.keys != EMPTY
+        return self.keys != empty_key(self.keys.dtype)
 
     def occupancy(self) -> jax.Array:
-        return jnp.sum(self.valid().astype(jnp.int32))
+        # dtype pinned: x64 mode would promote a plain sum to int64 and
+        # break scan/while_loop carries built around occupancy counters
+        return jnp.sum(self.valid(), dtype=jnp.int32)
 
 
-def empty_state(capacity: int, width: int) -> AggState:
-    """A fresh, all-invalid accumulator of fixed capacity."""
+def empty_state(
+    capacity: int,
+    width: int,
+    *,
+    key_dtype=np.uint32,
+    widths: tuple[int, int, int] | None = None,
+) -> AggState:
+    """A fresh, all-invalid accumulator of fixed capacity.
+
+    ``widths`` overrides the per-plane (sum, min, max) widths; by default
+    all three carry ``width`` columns.
+    """
+    ws, wm, wx = widths if widths is not None else (width, width, width)
+    key_dtype = np.dtype(key_dtype)
     return AggState(
-        keys=jnp.full((capacity,), EMPTY, dtype=jnp.uint32),
+        keys=jnp.full((capacity,), empty_key(key_dtype), dtype=key_dtype),
         count=jnp.zeros((capacity,), dtype=jnp.int32),
-        sum=jnp.zeros((capacity, width), dtype=jnp.float32),
-        min=jnp.full((capacity, width), _F32_INF, dtype=jnp.float32),
-        max=jnp.full((capacity, width), -_F32_INF, dtype=jnp.float32),
+        sum=jnp.zeros((capacity, ws), dtype=jnp.float32),
+        min=jnp.full((capacity, wm), _F32_INF, dtype=jnp.float32),
+        max=jnp.full((capacity, wx), -_F32_INF, dtype=jnp.float32),
     )
 
 
-def rows_to_state(keys: jax.Array, payload: jax.Array | None) -> AggState:
-    """Lift raw input rows into aggregate states (count=1, sum=min=max=v)."""
-    keys = keys.astype(jnp.uint32)
+def empty_like(state: AggState, capacity: int) -> AggState:
+    """An all-invalid state matching ``state``'s key dtype and plane widths."""
+    return empty_state(
+        capacity, state.width, key_dtype=state.key_dtype, widths=state.widths
+    )
+
+
+def rows_to_state(
+    keys: jax.Array,
+    payload: jax.Array | None,
+    *,
+    widths: tuple[int, int, int] | None = None,
+) -> AggState:
+    """Lift raw input rows into aggregate states (count=1, sum=min=max=v).
+
+    ``widths`` selects which value planes to materialize: each entry is
+    either the payload width V or 0 (plane not requested).
+    """
+    keys = as_key_array(keys)
     n = keys.shape[0]
     if payload is None:
         payload = jnp.zeros((n, 0), dtype=jnp.float32)
     if payload.ndim == 1:
         payload = payload[:, None]
     payload = payload.astype(jnp.float32)
-    valid = keys != EMPTY
+    v = payload.shape[1]
+    ws, wm, wx = widths if widths is not None else (v, v, v)
+    for w in (ws, wm, wx):
+        assert w in (0, v), f"plane width {w} must be 0 or the payload width {v}"
+    valid = keys != empty_key(keys.dtype)
     vcol = valid[:, None]
     return AggState(
         keys=keys,
         count=valid.astype(jnp.int32),
-        sum=jnp.where(vcol, payload, 0.0),
-        min=jnp.where(vcol, payload, _F32_INF),
-        max=jnp.where(vcol, payload, -_F32_INF),
+        sum=jnp.where(vcol, payload, 0.0) if ws else jnp.zeros((n, 0), jnp.float32),
+        min=jnp.where(vcol, payload, _F32_INF) if wm else jnp.zeros((n, 0), jnp.float32),
+        max=jnp.where(vcol, payload, -_F32_INF) if wx else jnp.zeros((n, 0), jnp.float32),
     )
 
 

@@ -26,16 +26,19 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import sorted_ops
-from repro.core.types import EMPTY, AggState, rows_to_state
+from repro.core.types import AggState, empty_key, rows_to_state
 from repro.distributed._compat import shard_map
 
 
 def _range_of(keys, world):
-    """Owner of each key under contiguous range partitioning of uint32."""
-    span = (1 << 32) // world
+    """Owner of each key under contiguous range partitioning of the key
+    dtype's domain (uint32 or uint64)."""
+    bits = np.dtype(keys.dtype).itemsize * 8
+    span = keys.dtype.type((1 << bits) // world)
     return jnp.minimum(keys // span, world - 1).astype(jnp.int32)
 
 
@@ -100,8 +103,8 @@ def make_distributed_groupby(mesh, axis: str = "data", *, capacity: int):
         return jax.tree.map(lambda x: x[:capacity], merged)
 
     def _fill_like(x):
-        if x.dtype == jnp.uint32:
-            return jnp.uint32(EMPTY)
+        if x.dtype in (jnp.uint32, jnp.uint64):
+            return empty_key(x.dtype)
         if jnp.issubdtype(x.dtype, jnp.floating):
             return jnp.zeros((), x.dtype)
         return jnp.zeros((), x.dtype)

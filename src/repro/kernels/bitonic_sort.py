@@ -3,7 +3,7 @@
 The paper replaces quicksort/priority queues with an ordered in-memory
 index; on TPU the index's "insert a sorted batch" operation needs the
 batch sorted first (§3.4).  This kernel sorts one power-of-two tile of
-uint32 keys (with an optional uint32 payload moved alongside, e.g. the
+uint32 keys (with optional uint32 payload lanes moved alongside, e.g. the
 original row position for argsort) entirely in VMEM.
 
 TPU adaptation: the classic compare-exchange `partner = i XOR j` is
@@ -14,8 +14,13 @@ All rolls are power-of-two strides of the trailing (lane) axis of a
 iota.  Work/depth: N·log²N compares, fully VPU-vectorized, zero control
 flow (the stage loops unroll at trace time).
 
+Keys may span multiple uint32 **lanes** compared lexicographically (hi
+lane first): 64-bit composite keys sort as a (hi, lo) pair without any
+native 64-bit ops — each compare-exchange stage rolls every lane and
+selects with one shared lexicographic predicate.
+
 Grid: one program per tile; ``ops.py`` shards larger inputs into tiles
-and merges with :mod:`repro.kernels.merge_aggregate`.
+and merges with :mod:`repro.kernels.merge_path`.
 """
 from __future__ import annotations
 
@@ -25,93 +30,97 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.segmented_reduce import _lex_leq
 
-def _cex(keys, payload, j: int, direction):
+
+def _cex(key_lanes, move_lanes, j: int, direction):
     """One compare-exchange stage at stride j.
 
-    keys/payload: (1, N); direction: (1, N) bool, True = ascending block.
+    key_lanes / move_lanes: tuples of (1, N) arrays; direction: (1, N)
+    bool, True = ascending block.  Keys compare lexicographically across
+    lanes; move lanes travel with their row.
     """
-    n = keys.shape[-1]
-    idx = jax.lax.broadcasted_iota(jnp.int32, keys.shape, 1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, key_lanes[0].shape, 1)
     upper = (idx & j) != 0  # bit_j set → partner is i - j
-    # roll(+j) brings x[i-j] to lane i; roll(-j) brings x[i+j]
-    part_hi = jnp.roll(keys, j, axis=-1)
-    part_lo = jnp.roll(keys, -j, axis=-1)
-    partner = jnp.where(upper, part_hi, part_lo)
+
+    def partner(x):
+        # roll(+j) brings x[i-j] to lane i; roll(-j) brings x[i+j]
+        return jnp.where(upper, jnp.roll(x, j, axis=-1), jnp.roll(x, -j, axis=-1))
+
+    part_keys = tuple(partner(k) for k in key_lanes)
     # ascending: lane with bit clear keeps min, bit set keeps max
     keep_min = jnp.where(direction, ~upper, upper)
-    take_self = jnp.where(keep_min, keys <= partner, keys >= partner)
-    new_keys = jnp.where(take_self, keys, partner)
-    if payload is None:
-        return new_keys, None
-    pay_hi = jnp.roll(payload, j, axis=-1)
-    pay_lo = jnp.roll(payload, -j, axis=-1)
-    pay_partner = jnp.where(upper, pay_hi, pay_lo)
-    new_pay = jnp.where(take_self, payload, pay_partner)
-    return new_keys, new_pay
+    take_self = jnp.where(
+        keep_min, _lex_leq(key_lanes, part_keys), _lex_leq(part_keys, key_lanes)
+    )
+    new_keys = tuple(jnp.where(take_self, k, p) for k, p in zip(key_lanes, part_keys))
+    new_move = tuple(jnp.where(take_self, m, partner(m)) for m in move_lanes)
+    return new_keys, new_move
 
 
-def _bitonic_body(keys, payload):
-    n = keys.shape[-1]
+def _bitonic_body(key_lanes, move_lanes):
+    n = key_lanes[0].shape[-1]
     assert n & (n - 1) == 0, "tile length must be a power of two"
-    idx = jax.lax.broadcasted_iota(jnp.int32, keys.shape, 1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, key_lanes[0].shape, 1)
     k = 2
     while k <= n:
         # block of size k sorts ascending iff bit_k(i) clear (global ascending)
         direction = (idx & k) == 0 if k < n else jnp.ones_like(idx, dtype=bool)
         j = k // 2
         while j >= 1:
-            keys, payload = _cex(keys, payload, j, direction)
+            key_lanes, move_lanes = _cex(key_lanes, move_lanes, j, direction)
             j //= 2
         k *= 2
-    return keys, payload
+    return key_lanes, move_lanes
 
 
-def _sort_kernel(k_ref, o_ref):
-    keys, _ = _bitonic_body(k_ref[...], None)
-    o_ref[...] = keys
+def _make_kernel(nk: int, nm: int):
+    def _kernel(*refs):
+        keys = tuple(r[...] for r in refs[:nk])
+        move = tuple(r[...] for r in refs[nk : nk + nm])
+        keys, move = _bitonic_body(keys, move)
+        for r, v in zip(refs[nk + nm : 2 * nk + nm], keys):
+            r[...] = v
+        for r, v in zip(refs[2 * nk + nm :], move):
+            r[...] = v
+
+    return _kernel
 
 
-def _sort_kv_kernel(k_ref, v_ref, ok_ref, ov_ref):
-    keys, vals = _bitonic_body(k_ref[...], v_ref[...])
-    ok_ref[...] = keys
-    ov_ref[...] = vals
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort_multi(key_lanes, move_lanes=(), *, interpret: bool = True):
+    """Sort (T, N) tile batches along the last axis (N a power of 2).
+
+    ``key_lanes``: tuple of (T, N) arrays compared lexicographically (hi
+    lane first).  ``move_lanes``: tuple of (T, N) arrays carried alongside.
+    Returns (sorted_key_lanes, moved_lanes) as tuples.
+    """
+    key_lanes = tuple(key_lanes)
+    move_lanes = tuple(move_lanes)
+    t, n = key_lanes[0].shape
+    spec = pl.BlockSpec((1, n), lambda i: (i, 0))
+    all_in = key_lanes + move_lanes
+    out = pl.pallas_call(
+        _make_kernel(len(key_lanes), len(move_lanes)),
+        out_shape=tuple(jax.ShapeDtypeStruct((t, n), x.dtype) for x in all_in),
+        grid=(t,),
+        in_specs=[spec] * len(all_in),
+        out_specs=tuple([spec] * len(all_in)),
+        interpret=interpret,
+    )(*all_in)
+    return out[: len(key_lanes)], out[len(key_lanes) :]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bitonic_sort(keys: jax.Array, *, interpret: bool = True) -> jax.Array:
     """Sort a (T, N) batch of tiles along the last axis (N a power of 2)."""
-    t, n = keys.shape
-    return pl.pallas_call(
-        _sort_kernel,
-        out_shape=jax.ShapeDtypeStruct((t, n), keys.dtype),
-        grid=(t,),
-        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
-        interpret=interpret,
-    )(keys)
+    (sorted_keys,), _ = bitonic_sort_multi((keys,), (), interpret=interpret)
+    return sorted_keys
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bitonic_sort_kv(keys: jax.Array, vals: jax.Array, *, interpret: bool = True):
     """Key-sort with a payload column moved alongside (stable w.r.t. the
     payload when the payload encodes the original position in low bits)."""
-    t, n = keys.shape
-    out = pl.pallas_call(
-        _sort_kv_kernel,
-        out_shape=(
-            jax.ShapeDtypeStruct((t, n), keys.dtype),
-            jax.ShapeDtypeStruct((t, n), vals.dtype),
-        ),
-        grid=(t,),
-        in_specs=[
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-        ],
-        out_specs=(
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-            pl.BlockSpec((1, n), lambda i: (i, 0)),
-        ),
-        interpret=interpret,
-    )(keys, vals)
-    return out
+    (sorted_keys,), (moved,) = bitonic_sort_multi((keys,), (vals,), interpret=interpret)
+    return sorted_keys, moved

@@ -17,7 +17,10 @@ the same VMEM residency, so one page absorb costs one HBM round trip.
 
 Inputs need only be **sorted** — duplicates within either input are fine
 (they stay adjacent through the merge and the scan combines them).
-EMPTY (= uint32 max) padding ranks to the tail like any other key.
+Keys arrive as one or two uint32 **lanes**: 32-bit keys are one lane,
+64-bit keys a (hi, lo) pair compared lexicographically per lane — the
+TPU path needs no native 64-bit ops.  EMPTY (= all lanes 0xFFFF_FFFF)
+padding ranks to the tail like any other key.
 """
 from __future__ import annotations
 
@@ -28,18 +31,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.segmented_reduce import _segmented_scan
+from repro.kernels.segmented_reduce import _lex_leq, _segmented_scan
 
 
-def _merge_path_split(ka: jax.Array, kb: jax.Array):
+def _merge_path_split(ka_lanes, kb_lanes):
     """Per-lane diagonal binary search.
 
-    ka (1, N) and kb (1, M) sorted ascending.  Returns ``(ia, ib, take_a)``
-    of shape (1, N+M): lane ``k`` of the merged output reads ``A[ia[k]]``
-    when ``take_a[k]`` else ``B[ib[k]]`` (stable: A wins ties).
+    ka_lanes / kb_lanes: tuples of (1, N) / (1, M) uint32 key lanes (hi
+    lane first), each lexicographically sorted ascending.  Returns
+    ``(ia, ib, take_a)`` of shape (1, N+M): lane ``k`` of the merged
+    output reads ``A[ia[k]]`` when ``take_a[k]`` else ``B[ib[k]]``
+    (stable: A wins ties).
     """
-    n, m = ka.shape[-1], kb.shape[-1]
-    a, b = ka[0], kb[0]
+    n, m = ka_lanes[0].shape[-1], kb_lanes[0].shape[-1]
+    a_lanes = [k[0] for k in ka_lanes]
+    b_lanes = [k[0] for k in kb_lanes]
     k = jax.lax.broadcasted_iota(jnp.int32, (1, n + m), 1)
     lo = jnp.maximum(0, k - m)  # feasible: all of B already consumed
     hi = jnp.minimum(k, n)
@@ -49,78 +55,106 @@ def _merge_path_split(ka: jax.Array, kb: jax.Array):
     # vacuous when either side is exhausted.
     for _ in range(int(math.ceil(math.log2(max(n, m) + 1))) + 1):
         mid = (lo + hi + 1) >> 1
-        a_prev = jnp.take(a, jnp.clip(mid - 1, 0, n - 1))
-        b_next = jnp.take(b, jnp.clip(k - mid, 0, m - 1))
-        ok = (mid <= 0) | (k - mid >= m) | (a_prev <= b_next)
+        a_prev = [jnp.take(a, jnp.clip(mid - 1, 0, n - 1)) for a in a_lanes]
+        b_next = [jnp.take(b, jnp.clip(k - mid, 0, m - 1)) for b in b_lanes]
+        ok = (mid <= 0) | (k - mid >= m) | _lex_leq(a_prev, b_next)
         lo = jnp.where(ok, mid, lo)
         hi = jnp.where(ok, hi, mid - 1)
     ia = lo
     ib = k - lo
-    a_key = jnp.take(a, jnp.clip(ia, 0, n - 1))
-    b_key = jnp.take(b, jnp.clip(ib, 0, m - 1))
-    take_a = (ia < n) & ((ib >= m) | (a_key <= b_key))
+    a_key = [jnp.take(a, jnp.clip(ia, 0, n - 1)) for a in a_lanes]
+    b_key = [jnp.take(b, jnp.clip(ib, 0, m - 1)) for b in b_lanes]
+    take_a = (ia < n) & ((ib >= m) | _lex_leq(a_key, b_key))
     return jnp.clip(ia, 0, n - 1), jnp.clip(ib, 0, m - 1), take_a
 
 
-def _kernel(ka_ref, ca_ref, sa_ref, mna_ref, mxa_ref,
-            kb_ref, cb_ref, sb_ref, mnb_ref, mxb_ref,
-            ok_ref, oc_ref, os_ref, omn_ref, omx_ref, ot_ref):
-    ka, kb = ka_ref[...], kb_ref[...]
-    ia, ib, take_a = _merge_path_split(ka, kb)
+def _make_kernel(nlanes: int):
+    def _kernel(*refs):
+        ka_refs = refs[:nlanes]
+        ca_ref, sa_ref, mna_ref, mxa_ref = refs[nlanes : nlanes + 4]
+        kb_refs = refs[nlanes + 4 : 2 * nlanes + 4]
+        cb_ref, sb_ref, mnb_ref, mxb_ref = refs[2 * nlanes + 4 : 2 * nlanes + 8]
+        outs = refs[2 * nlanes + 8 :]
+        ok_refs = outs[:nlanes]
+        oc_ref, os_ref, omn_ref, omx_ref, ot_ref = outs[nlanes:]
 
-    def sel1(xa, xb):  # (1,N)/(1,M) → (1,N+M)
-        return jnp.where(take_a, jnp.take(xa[0], ia), jnp.take(xb[0], ib))
+        ka = tuple(k[...] for k in ka_refs)
+        kb = tuple(k[...] for k in kb_refs)
+        ia, ib, take_a = _merge_path_split(ka, kb)
 
-    def selv(xa, xb):  # (V,N)/(V,M) → (V,N+M); take_a broadcasts over V
-        ga = jnp.take(xa, ia[0], axis=-1)
-        gb = jnp.take(xb, ib[0], axis=-1)
-        return jnp.where(take_a, ga, gb)
+        def sel1(xa, xb):  # (1,N)/(1,M) → (1,N+M)
+            return jnp.where(take_a, jnp.take(xa[0], ia), jnp.take(xb[0], ib))
 
-    keys = sel1(ka, kb)
-    cnt = sel1(ca_ref[...], cb_ref[...])
-    ssum = selv(sa_ref[0], sb_ref[0])
-    smin = selv(mna_ref[0], mnb_ref[0])
-    smax = selv(mxa_ref[0], mxb_ref[0])
-    # absorb duplicates (segmented scan) while everything is VMEM-resident
-    cnt, ssum, smin, smax, tails = _segmented_scan(keys, cnt, ssum, smin, smax)
-    ok_ref[...] = keys
-    oc_ref[...] = cnt
-    os_ref[...] = ssum[None]
-    omn_ref[...] = smin[None]
-    omx_ref[...] = smax[None]
-    ot_ref[...] = tails
+        def selv(xa, xb):  # (V,N)/(V,M) → (V,N+M); take_a broadcasts over V
+            ga = jnp.take(xa, ia[0], axis=-1)
+            gb = jnp.take(xb, ib[0], axis=-1)
+            return jnp.where(take_a, ga, gb)
+
+        keys = tuple(sel1(a, b) for a, b in zip(ka, kb))
+        cnt = sel1(ca_ref[...], cb_ref[...])
+        ssum = selv(sa_ref[0], sb_ref[0])
+        smin = selv(mna_ref[0], mnb_ref[0])
+        smax = selv(mxa_ref[0], mxb_ref[0])
+        # absorb duplicates (segmented scan) while everything is VMEM-resident
+        cnt, ssum, smin, smax, tails = _segmented_scan(keys, cnt, ssum, smin, smax)
+        for o, kk in zip(ok_refs, keys):
+            o[...] = kk
+        oc_ref[...] = cnt
+        os_ref[...] = ssum[None]
+        omn_ref[...] = smin[None]
+        omx_ref[...] = smax[None]
+        ot_ref[...] = tails
+
+    return _kernel
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def merge_path_tiles(ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb, *,
                      interpret: bool = True):
-    """Merge two sorted tile sets — (T,N)+(T,M) keys, (T,V,·) payloads —
-    into (T,N+M) merged + scanned aggregates + tail mask.  Unlike the
-    bitonic kernel, N and M need not match (compaction by the caller,
-    see ops.py)."""
-    t, n = ka.shape
-    m = kb.shape[-1]
-    v = sa.shape[1]
+    """Merge two sorted tile sets — (T,N)+(T,M) key lane(s), (T,V?,·)
+    payloads — into (T,N+M) merged + scanned aggregates + tail mask.
+    ``ka``/``kb`` are (T,N) arrays (one lane) or tuples of (T,N) uint32
+    lanes (hi first) for 64-bit keys.  Unlike the bitonic kernel, N and M
+    need not match (compaction by the caller, see ops.py), and the sum /
+    min / max planes may have different widths."""
+    ka_lanes = tuple(ka) if isinstance(ka, (tuple, list)) else (ka,)
+    kb_lanes = tuple(kb) if isinstance(kb, (tuple, list)) else (kb,)
+    assert len(ka_lanes) == len(kb_lanes)
+    nlanes = len(ka_lanes)
+    t, n = ka_lanes[0].shape
+    m = kb_lanes[0].shape[-1]
     k_out = n + m
     sa_spec = pl.BlockSpec((1, n), lambda i: (i, 0))
     sb_spec = pl.BlockSpec((1, m), lambda i: (i, 0))
-    va_spec = pl.BlockSpec((1, v, n), lambda i: (i, 0, 0))
-    vb_spec = pl.BlockSpec((1, v, m), lambda i: (i, 0, 0))
+
+    def vspec(x):
+        v = x.shape[1]
+        w = x.shape[-1]
+        return pl.BlockSpec((1, v, w), lambda i: (i, 0, 0))
+
     o1 = pl.BlockSpec((1, k_out), lambda i: (i, 0))
-    ov = pl.BlockSpec((1, v, k_out), lambda i: (i, 0, 0))
+
+    def ovspec(v):
+        return pl.BlockSpec((1, v, k_out), lambda i: (i, 0, 0))
+
     return pl.pallas_call(
-        _kernel,
-        out_shape=(
-            jax.ShapeDtypeStruct((t, k_out), ka.dtype),
+        _make_kernel(nlanes),
+        out_shape=tuple(
+            jax.ShapeDtypeStruct((t, k_out), k.dtype) for k in ka_lanes
+        ) + (
             jax.ShapeDtypeStruct((t, k_out), ca.dtype),
-            jax.ShapeDtypeStruct((t, v, k_out), sa.dtype),
-            jax.ShapeDtypeStruct((t, v, k_out), mna.dtype),
-            jax.ShapeDtypeStruct((t, v, k_out), mxa.dtype),
+            jax.ShapeDtypeStruct((t, sa.shape[1], k_out), sa.dtype),
+            jax.ShapeDtypeStruct((t, mna.shape[1], k_out), mna.dtype),
+            jax.ShapeDtypeStruct((t, mxa.shape[1], k_out), mxa.dtype),
             jax.ShapeDtypeStruct((t, k_out), jnp.bool_),
         ),
         grid=(t,),
-        in_specs=[sa_spec, sa_spec, va_spec, va_spec, va_spec,
-                  sb_spec, sb_spec, vb_spec, vb_spec, vb_spec],
-        out_specs=(o1, o1, ov, ov, ov, o1),
+        in_specs=[sa_spec] * nlanes
+        + [sa_spec, vspec(sa), vspec(mna), vspec(mxa)]
+        + [sb_spec] * nlanes
+        + [sb_spec, vspec(sb), vspec(mnb), vspec(mxb)],
+        out_specs=tuple([o1] * nlanes) + (
+            o1, ovspec(sa.shape[1]), ovspec(mna.shape[1]), ovspec(mxa.shape[1]), o1,
+        ),
         interpret=interpret,
-    )(ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb)
+    )(*ka_lanes, ca, sa, mna, mxa, *kb_lanes, cb, sb, mnb, mxb)

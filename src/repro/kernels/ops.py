@@ -5,6 +5,13 @@ to powers of two / MXU multiples, EMPTY-key padding, AggState struct ↔
 (T,N)/(T,V,N) tile layout, and the XLA-side compaction scatter that
 follows the in-kernel segmented scans.  ``interpret=True`` everywhere on
 CPU (Mosaic is TPU-only); the flag flips off on real hardware.
+
+Key-width handling: kernels only ever see uint32 lanes.  A uint64 key
+vector is split here into a (hi, lo) pair of uint32 lanes — compared
+lexicographically inside the kernels — and recombined on the way out, so
+the TPU path needs no native 64-bit integer ops.  Callers must hold
+:func:`repro.core.types.key_dtype_context` for uint64 inputs (the
+engine's sorted_ops entry points do).
 """
 from __future__ import annotations
 
@@ -15,7 +22,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dispatch as _dispatch
-from repro.core.types import EMPTY, AggState
+from repro.core.types import (
+    EMPTY,
+    AggState,
+    concat_states,
+    empty_key,
+    empty_like,
+)
 from repro.kernels import bitonic_sort as _bs
 from repro.kernels import grouped_matmul as _gm
 from repro.kernels import merge_aggregate as _ma
@@ -26,66 +39,122 @@ from repro.kernels import segmented_reduce as _sr
 # TPU (override with REPRO_PALLAS_INTERPRET=0/1).
 INTERPRET = _dispatch.should_interpret()
 
+_LO32 = 0xFFFFFFFF
+
 
 def _next_pow2(n: int) -> int:
     return 1 << max(1, (n - 1).bit_length())
 
 
-def sort_u32(keys: jax.Array) -> jax.Array:
-    """Sort a 1-D uint32 vector (EMPTY-padded to a power of two)."""
-    n = keys.shape[0]
-    m = _next_pow2(n)
-    padded = jnp.full((1, m), EMPTY, jnp.uint32).at[0, :n].set(keys)
-    return _bs.bitonic_sort(padded, interpret=INTERPRET)[0, :n]
+def _key_lanes(keys: jax.Array) -> tuple[jax.Array, ...]:
+    """Split a 1-D key vector into uint32 lanes (hi lane first)."""
+    if keys.dtype == jnp.uint64:
+        hi = (keys >> np.uint64(32)).astype(jnp.uint32)
+        lo = (keys & np.uint64(_LO32)).astype(jnp.uint32)
+        return (hi, lo)
+    return (keys.astype(jnp.uint32),)
 
 
-def argsort_u32(keys: jax.Array) -> jax.Array:
-    """Key-argsort via the kv kernel with the row index as payload."""
+def _lanes_to_keys(lanes: tuple[jax.Array, ...], dtype) -> jax.Array:
+    """Recombine uint32 lanes into a key vector of ``dtype``."""
+    if len(lanes) == 1:
+        return lanes[0].astype(dtype)
+    hi, lo = lanes
+    return (hi.astype(jnp.uint64) << np.uint64(32)) | lo.astype(jnp.uint64)
+
+
+def sort_keys(keys: jax.Array) -> jax.Array:
+    """Sort a 1-D uint32/uint64 key vector (EMPTY-padded to a power of 2)."""
     n = keys.shape[0]
     m = _next_pow2(n)
-    padded = jnp.full((1, m), EMPTY, jnp.uint32).at[0, :n].set(keys)
-    pay = jnp.arange(m, dtype=jnp.uint32)[None, :]
-    _, perm = _bs.bitonic_sort_kv(padded, pay, interpret=INTERPRET)
-    perm = perm[0]
-    # padded slots carry EMPTY keys which sort to the tail; any index ≥ n
-    # in the first n outputs would be a bug (covered by tests)
-    return jnp.minimum(perm[:n], n - 1).astype(jnp.int32)
+    lanes = tuple(
+        jnp.full((1, m), EMPTY, jnp.uint32).at[0, :n].set(lane)
+        for lane in _key_lanes(keys)
+    )
+    sorted_lanes, _ = _bs.bitonic_sort_multi(lanes, (), interpret=INTERPRET)
+    return _lanes_to_keys(tuple(l[0, :n] for l in sorted_lanes), keys.dtype)
+
+
+def argsort_keys(keys: jax.Array) -> jax.Array:
+    """Key-argsort via the multi-lane kernel, with the row index as an
+    extra LEAST-significant key lane.
+
+    The index lane makes the bitonic network stable: all EMPTY keys tie,
+    and without it the (unstable) network could emit a pow2-pad slot
+    (index ≥ n) ahead of one of the state's own EMPTY rows — the first n
+    outputs would then reference a pad row and any clamp would duplicate
+    a real row into the tail.  With the index tie-break, in-state rows
+    (indices < n) always precede pad rows, so the first n outputs are
+    exactly a permutation of range(n)."""
+    n = keys.shape[0]
+    m = _next_pow2(n)
+    lanes = tuple(
+        jnp.full((1, m), EMPTY, jnp.uint32).at[0, :n].set(lane)
+        for lane in _key_lanes(keys)
+    )
+    idx_lane = jnp.arange(m, dtype=jnp.uint32)[None, :]
+    sorted_lanes, _ = _bs.bitonic_sort_multi(
+        lanes + (idx_lane,), (), interpret=INTERPRET
+    )
+    perm = sorted_lanes[-1][0]
+    return perm[:n].astype(jnp.int32)
+
+
+# Back-compat aliases (the registry and older callers use the u32 names).
+sort_u32 = sort_keys
+argsort_u32 = argsort_keys
+
+
+def _plane_to_tile(plane: jax.Array, n: int, fill: float) -> jax.Array:
+    """(N, V) value plane → (1, V, N) kernel tile; width-0 planes become a
+    1-wide neutral dummy the kernel scans and the caller drops."""
+    if plane.shape[1] == 0:
+        return jnp.full((1, 1, n), fill, jnp.float32)
+    return jnp.moveaxis(plane, 0, -1)[None]
 
 
 def _state_to_tiles(state: AggState, n: int):
-    """AggState (N rows) → (1,N) / (1,V,N) tiles, V≥1 (dummy col if V=0)."""
-    keys = state.keys[None]
+    """AggState (N rows) → key lanes (1,N), cnt (1,N), value tiles
+    (1,V?,N) with per-plane widths (dummy 1-wide plane when absent)."""
+    key_lanes = tuple(lane[None] for lane in _key_lanes(state.keys))
     cnt = state.count[None]
-    v = max(1, state.width)
-    if state.width == 0:
-        z = jnp.zeros((1, 1, n), jnp.float32)
-        return keys, cnt, z, z, z
-    ssum = jnp.moveaxis(state.sum, 0, -1)[None]
-    smin = jnp.moveaxis(state.min, 0, -1)[None]
-    smax = jnp.moveaxis(state.max, 0, -1)[None]
-    return keys, cnt, ssum, smin, smax
+    ssum = _plane_to_tile(state.sum, n, 0.0)
+    smin = _plane_to_tile(state.min, n, jnp.inf)
+    smax = _plane_to_tile(state.max, n, -jnp.inf)
+    return key_lanes, cnt, ssum, smin, smax
 
 
-def _compact(keys, cnt, ssum, smin, smax, tails, width: int) -> AggState:
-    """Scatter segment tails to the front (XLA side; memory-bound)."""
+def _compact(keys, cnt, ssum, smin, smax, tails, widths) -> AggState:
+    """Scatter segment tails to the front (XLA side; memory-bound).
+
+    ``keys`` is the merged/sorted key *vector* (n,) in its native dtype;
+    the value tiles are (1,V?,n); ``widths`` the output per-plane widths.
+    """
     n = keys.shape[-1]
-    keys, cnt, tails = keys[0], cnt[0], tails[0]
+    cnt, tails = cnt[0], tails[0]
     ssum, smin, smax = ssum[0], smin[0], smax[0]
     pos = jnp.cumsum(tails.astype(jnp.int32)) - 1
     idx = jnp.where(tails, pos, n)  # out-of-range → dropped
-    out_keys = jnp.full((n,), EMPTY, jnp.uint32).at[idx].set(keys, mode="drop")
+    kd = keys.dtype
+    out_keys = jnp.full((n,), empty_key(kd), kd).at[idx].set(keys, mode="drop")
     out_cnt = jnp.zeros((n,), cnt.dtype).at[idx].set(cnt, mode="drop")
 
     def sc(col, fill):
         return jnp.full((n,), fill, col.dtype).at[idx].set(col, mode="drop")
 
-    if width == 0:
-        z = jnp.zeros((n, 0), jnp.float32)
-        return AggState(out_keys, out_cnt, z, z, z)
-    out_sum = jnp.stack([sc(ssum[v], 0.0) for v in range(width)], axis=-1)
-    out_min = jnp.stack([sc(smin[v], jnp.inf) for v in range(width)], axis=-1)
-    out_max = jnp.stack([sc(smax[v], -jnp.inf) for v in range(width)], axis=-1)
-    return AggState(out_keys, out_cnt, out_sum, out_min, out_max)
+    def plane(tile, width, fill):
+        if width == 0:
+            return jnp.zeros((n, 0), jnp.float32)
+        return jnp.stack([sc(tile[v], fill) for v in range(width)], axis=-1)
+
+    ws, wm, wx = widths
+    return AggState(
+        out_keys,
+        out_cnt,
+        plane(ssum, ws, 0.0),
+        plane(smin, wm, jnp.inf),
+        plane(smax, wx, -jnp.inf),
+    )
 
 
 def segmented_combine(state: AggState) -> AggState:
@@ -93,19 +162,12 @@ def segmented_combine(state: AggState) -> AggState:
     be key-sorted; output compacted to the front, EMPTY-padded)."""
     n0 = state.capacity
     n = _next_pow2(n0)
-    if n != n0:
-        pad = n - n0
-        state = jax.tree.map(
-            lambda x: jnp.concatenate(
-                [x, jnp.full((pad,) + x.shape[1:], _pad_val(x), x.dtype)], 0
-            ),
-            state,
-        )
-    keys, cnt, ssum, smin, smax = _state_to_tiles(state, n)
+    state = _pad_state(state, n)
+    key_lanes, cnt, ssum, smin, smax = _state_to_tiles(state, n)
     c2, s2, mn2, mx2, tails = _sr.segmented_scan_tiles(
-        keys, cnt, ssum, smin, smax, interpret=INTERPRET
+        key_lanes, cnt, ssum, smin, smax, interpret=INTERPRET
     )
-    out = _compact(keys, c2, s2, mn2, mx2, tails, state.width)
+    out = _compact(state.keys, c2, s2, mn2, mx2, tails, state.widths)
     return jax.tree.map(lambda x: x[:n0], out)
 
 
@@ -125,53 +187,39 @@ def merge_absorb_sorted(a: AggState, b: AggState, *, assume_unique: bool = False
     b = _pad_state(b, nb)
     ka, ca, sa, mna, mxa = _state_to_tiles(a, na)
     kb, cb, sb, mnb, mxb = _state_to_tiles(b, nb)
-    k2, c2, s2, mn2, mx2, tails = _mp.merge_path_tiles(
+    out_tiles = _mp.merge_path_tiles(
         ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb, interpret=INTERPRET
     )
-    out = _compact(k2, c2, s2, mn2, mx2, tails, a.width)
+    nlanes = len(ka)
+    merged_lanes = tuple(t[0] for t in out_tiles[:nlanes])
+    c2, s2, mn2, mx2, tails = out_tiles[nlanes:]
+    merged_keys = _lanes_to_keys(merged_lanes, a.keys.dtype)
+    out = _compact(merged_keys, c2, s2, mn2, mx2, tails, a.widths)
     # compacted rows ≤ |a|+|b| ≤ na+nb: trimming the EMPTY tail is lossless
     return jax.tree.map(lambda x: x[:cap_out], out)
 
 
 def merge_absorb_sorted_bitonic(a: AggState, b: AggState) -> AggState:
     """Previous-generation fused step (bitonic merge network); kept for
-    benchmarking against the merge-path kernel."""
+    benchmarking against the merge-path kernel.  uint32 keys only."""
+    assert a.keys.dtype == jnp.uint32, "bitonic merge benchmark path is u32-only"
     cap_out = a.capacity + b.capacity
     n = _next_pow2(max(a.capacity, b.capacity))
     a = _pad_state(a, n)
     b = _pad_state(b, n)
-    ka, ca, sa, mna, mxa = _state_to_tiles(a, n)
-    kb, cb, sb, mnb, mxb = _state_to_tiles(b, n)
+    (ka,), ca, sa, mna, mxa = _state_to_tiles(a, n)
+    (kb,), cb, sb, mnb, mxb = _state_to_tiles(b, n)
     k2, c2, s2, mn2, mx2, tails = _ma.merge_absorb_tiles(
         ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb, interpret=INTERPRET
     )
-    out = _compact(k2, c2, s2, mn2, mx2, tails, a.width)
+    out = _compact(k2[0], c2, s2, mn2, mx2, tails, a.widths)
     return jax.tree.map(lambda x: x[: min(cap_out, 2 * n)], out)
-
-
-def _pad_val(x):
-    if x.dtype == jnp.uint32:
-        return EMPTY
-    if jnp.issubdtype(x.dtype, jnp.floating):
-        return 0.0
-    return 0
 
 
 def _pad_state(state: AggState, n: int) -> AggState:
     if state.capacity == n:
         return state
-    pad = n - state.capacity
-    return AggState(
-        keys=jnp.concatenate([state.keys, jnp.full((pad,), EMPTY, jnp.uint32)]),
-        count=jnp.concatenate([state.count, jnp.zeros((pad,), state.count.dtype)]),
-        sum=jnp.concatenate([state.sum, jnp.zeros((pad, state.width), jnp.float32)]),
-        min=jnp.concatenate(
-            [state.min, jnp.full((pad, state.width), jnp.inf, jnp.float32)]
-        ),
-        max=jnp.concatenate(
-            [state.max, jnp.full((pad, state.width), -jnp.inf, jnp.float32)]
-        ),
-    )
+    return concat_states(state, empty_like(state, n - state.capacity))
 
 
 def moe_grouped_matmul(x, w, *, capacity, block_m=128, block_n=128, block_k=128):

@@ -15,7 +15,14 @@ the XLA caller (see ops.py) — the O(N log N) compute lives here.
 
 The kernel carries all aggregate columns in one fused pass: count and sum
 scan with ⊕ = add, min/max columns with ⊕ = min/max, sharing the boundary
-flags and the rolls' mask logic.
+flags and the rolls' mask logic.  The value planes may have different
+widths (an AggSpec that skips e.g. min/max passes a 1-wide dummy plane).
+
+Keys arrive as one or two uint32 **lanes**: 32-bit keys are a single
+lane; 64-bit keys are a (hi, lo) pair compared/equality-tested per lane,
+so the kernel never needs native 64-bit integer ops on the VPU.  A key is
+EMPTY iff *every* lane is the uint32 EMPTY (the 64-bit sentinel's halves
+are both 0xFFFF_FFFF).
 """
 from __future__ import annotations
 
@@ -28,14 +35,42 @@ from jax.experimental import pallas as pl
 from repro.core.types import EMPTY
 
 
-def _segmented_scan(keys, cnt, ssum, smin, smax):
-    """keys (1,N); cnt (1,N); ssum/smin/smax (V,N). Returns scanned values
-    and the tail mask (last row of each segment)."""
-    n = keys.shape[-1]
-    idx = jax.lax.broadcasted_iota(jnp.int32, keys.shape, 1)
-    valid = keys != EMPTY
-    prev_keys = jnp.roll(keys, 1, axis=-1)
-    heads = (keys != prev_keys) | (idx == 0)
+def _lex_leq(a_lanes, b_lanes):
+    """a <= b on multi-lane keys (hi lane first)."""
+    leq = a_lanes[-1] <= b_lanes[-1]
+    for a, b in zip(reversed(a_lanes[:-1]), reversed(b_lanes[:-1])):
+        leq = (a < b) | ((a == b) & leq)
+    return leq
+
+
+def _lanes_eq(a_lanes, b_lanes):
+    """Elementwise equality of two multi-lane key vectors."""
+    eq = a_lanes[0] == b_lanes[0]
+    for a, b in zip(a_lanes[1:], b_lanes[1:]):
+        eq = eq & (a == b)
+    return eq
+
+
+def _lanes_empty(lanes):
+    """True where the (possibly multi-lane) key is the EMPTY sentinel."""
+    e = lanes[0] == EMPTY
+    for k in lanes[1:]:
+        e = e & (k == EMPTY)
+    return e
+
+
+def _segmented_scan(keys_lanes, cnt, ssum, smin, smax):
+    """keys_lanes: tuple of (1,N) uint32 lanes (hi→lo); cnt (1,N);
+    ssum/smin/smax (V?,N).  Returns scanned values and the tail mask (last
+    row of each segment)."""
+    if not isinstance(keys_lanes, (tuple, list)):
+        keys_lanes = (keys_lanes,)
+    k0 = keys_lanes[0]
+    n = k0.shape[-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, k0.shape, 1)
+    valid = ~_lanes_empty(keys_lanes)
+    prev = [jnp.roll(k, 1, axis=-1) for k in keys_lanes]
+    heads = ~_lanes_eq(keys_lanes, prev) | (idx == 0)
     f = heads | ~valid
     d = 1
     while d < n:
@@ -53,46 +88,56 @@ def _segmented_scan(keys, cnt, ssum, smin, smax):
         smax = jnp.where(can_add, jnp.maximum(smax, mxd), smax)
         f = f | (fd & ~edge) | edge
         d *= 2
-    next_keys = jnp.roll(keys, -1, axis=-1)
-    tails = ((keys != next_keys) | (idx == n - 1)) & valid
+    nxt = [jnp.roll(k, -1, axis=-1) for k in keys_lanes]
+    tails = (~_lanes_eq(keys_lanes, nxt) | (idx == n - 1)) & valid
     return cnt, ssum, smin, smax, tails
 
 
-def _kernel(k_ref, c_ref, s_ref, mn_ref, mx_ref,
-            oc_ref, os_ref, omn_ref, omx_ref, ot_ref):
-    cnt, ssum, smin, smax, tails = _segmented_scan(
-        k_ref[...], c_ref[...], s_ref[...], mn_ref[...], mx_ref[...]
-    )
-    oc_ref[...] = cnt
-    os_ref[...] = ssum
-    omn_ref[...] = smin
-    omx_ref[...] = smax
-    ot_ref[...] = tails
+def _make_kernel(nlanes: int):
+    def _kernel(*refs):
+        k_refs = refs[:nlanes]
+        c_ref, s_ref, mn_ref, mx_ref = refs[nlanes : nlanes + 4]
+        oc_ref, os_ref, omn_ref, omx_ref, ot_ref = refs[nlanes + 4 :]
+        cnt, ssum, smin, smax, tails = _segmented_scan(
+            tuple(k[...] for k in k_refs),
+            c_ref[...], s_ref[...], mn_ref[...], mx_ref[...],
+        )
+        oc_ref[...] = cnt
+        os_ref[...] = ssum
+        omn_ref[...] = smin
+        omx_ref[...] = smax
+        ot_ref[...] = tails
+
+    return _kernel
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def segmented_scan_tiles(keys, cnt, ssum, smin, smax, *, interpret: bool = True):
-    """(T,N) keys/cnt and (T,V,N) value tiles → scanned values + tail mask."""
-    t, n = keys.shape
-    v = ssum.shape[1]
+    """(T,N) key lane(s) / cnt and (T,V?,N) value tiles → scanned values +
+    tail mask.  ``keys`` is a (T,N) array (one lane) or a tuple of (T,N)
+    uint32 lanes, hi lane first, for 64-bit keys."""
+    keys_lanes = keys if isinstance(keys, (tuple, list)) else (keys,)
+    keys_lanes = tuple(keys_lanes)
+    t, n = keys_lanes[0].shape
     spec1 = pl.BlockSpec((1, n), lambda i: (i, 0))
-    specv = pl.BlockSpec((1, v, n), lambda i: (i, 0, 0))
-    # kernel refs drop the leading block dim of size 1 via index maps below
-    def k1(ref):
-        return ref
+
+    def specv(x):
+        v = x.shape[1]
+        return pl.BlockSpec((1, v, n), lambda i: (i, 0, 0))
 
     out = pl.pallas_call(
-        _kernel,
+        _make_kernel(len(keys_lanes)),
         out_shape=(
             jax.ShapeDtypeStruct((t, n), cnt.dtype),
-            jax.ShapeDtypeStruct((t, v, n), ssum.dtype),
-            jax.ShapeDtypeStruct((t, v, n), smin.dtype),
-            jax.ShapeDtypeStruct((t, v, n), smax.dtype),
+            jax.ShapeDtypeStruct(ssum.shape, ssum.dtype),
+            jax.ShapeDtypeStruct(smin.shape, smin.dtype),
+            jax.ShapeDtypeStruct(smax.shape, smax.dtype),
             jax.ShapeDtypeStruct((t, n), jnp.bool_),
         ),
         grid=(t,),
-        in_specs=[spec1, spec1, specv, specv, specv],
-        out_specs=(spec1, specv, specv, specv, spec1),
+        in_specs=[spec1] * len(keys_lanes)
+        + [spec1, specv(ssum), specv(smin), specv(smax)],
+        out_specs=(spec1, specv(ssum), specv(smin), specv(smax), spec1),
         interpret=interpret,
-    )(keys, cnt, ssum, smin, smax)
+    )(*keys_lanes, cnt, ssum, smin, smax)
     return out

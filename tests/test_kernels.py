@@ -77,6 +77,21 @@ def test_ops_argsort_u32_non_pow2():
         np.testing.assert_array_equal(k[perm], np.sort(k))
 
 
+def test_ops_argsort_interior_empty_non_pow2_is_permutation():
+    """Regression: interior EMPTY rows tie with the pow2 padding; without
+    the index tie-break lane the unstable network could emit a pad slot
+    inside the first n outputs, and clamping duplicated a real row.  The
+    perm must be exactly a permutation of range(n) for every shape."""
+    from repro.core.types import EMPTY as E
+
+    for n in (5, 48, 100, 731):
+        k = RNG.integers(0, 40, size=(n,)).astype(np.uint32)
+        k[RNG.random(n) < 0.4] = E
+        perm = np.asarray(ops.argsort_u32(jnp.asarray(k)))
+        assert sorted(perm.tolist()) == list(range(n)), n
+        np.testing.assert_array_equal(k[perm], np.sort(k))
+
+
 # ---------------------------------------------------------------------------
 # segmented reduce
 # ---------------------------------------------------------------------------

@@ -19,17 +19,26 @@ from repro.core.ordered_index import (
     pair_combine_xla,
 )
 from repro.core.operators import validate_against_oracle
-from repro.core.types import EMPTY, AggState, empty_state, rows_to_state
+from repro.core.types import (
+    EMPTY,
+    AggState,
+    empty_state,
+    key_dtype_context,
+    rows_to_state,
+)
 
 RNG = np.random.default_rng(99)
 
 BACKENDS = ("xla", "pallas")
+KEY_DTYPES = (np.uint32, np.uint64)
 
 
-def _sorted_state(n, domain, width, rng=RNG):
-    keys = rng.integers(0, domain, n).astype(np.uint32)
+def _sorted_state(n, domain, width, rng=RNG, key_dtype=np.uint32):
+    keys = rng.integers(0, domain, n).astype(key_dtype)
+    if key_dtype == np.uint64:
+        keys = keys << np.uint64(30)  # spread past 32 bits
     pay = None if width == 0 else rng.normal(size=(n, width)).astype(np.float32)
-    st = rows_to_state(jnp.asarray(keys), None if pay is None else jnp.asarray(pay))
+    st = rows_to_state(keys, None if pay is None else jnp.asarray(pay))
     return sorted_ops.absorb(st), keys, pay
 
 
@@ -79,18 +88,22 @@ def _collect_primitives(jaxpr, acc):
     return acc
 
 
+@pytest.mark.parametrize("key_dtype", KEY_DTYPES)
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("assume_unique", [False, True])
-def test_merge_absorb_performs_no_sort(backend, assume_unique):
+def test_merge_absorb_performs_no_sort(backend, assume_unique, key_dtype):
     """merge_absorb of two sorted states must not contain a sort primitive
-    anywhere in its jaxpr (including inside the Pallas kernel body)."""
-    a, _, _ = _sorted_state(256, 100, 2)
-    b, _, _ = _sorted_state(128, 100, 2)
-    jx = jax.make_jaxpr(
-        lambda x, y: sorted_ops.merge_absorb(
-            x, y, backend=backend, assume_unique=assume_unique
-        )
-    )(a, b)
+    anywhere in its jaxpr (including inside the Pallas kernel body) — at
+    32 AND 64-bit key width (64-bit keys run as (hi, lo) uint32 lanes on
+    Pallas and native uint64 under x64 on XLA)."""
+    with key_dtype_context(key_dtype):
+        a, _, _ = _sorted_state(256, 100, 2, key_dtype=key_dtype)
+        b, _, _ = _sorted_state(128, 100, 2, key_dtype=key_dtype)
+        jx = jax.make_jaxpr(
+            lambda x, y: sorted_ops.merge_absorb(
+                x, y, backend=backend, assume_unique=assume_unique
+            )
+        )(a, b)
     prims = _collect_primitives(jx.jaxpr, set())
     assert "sort" not in prims, f"found sort primitive via backend={backend}: {prims}"
 

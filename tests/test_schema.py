@@ -1,0 +1,355 @@
+"""Schema front door: KeySpec packing, AggSpec planes, aggregate().
+
+Acceptance bar of the api_redesign PR: a 3-column composite key wider
+than 32 bits flows through ``repro.aggregate`` and matches the NumPy
+oracle on both backends, and the merge-absorb path stays sort-free at
+64 bits (the jaxpr check lives in tests/test_ordered_index.py,
+parameterized over key dtypes).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+import repro
+from repro.core import ExecConfig, sorted_ops
+from repro.core.operators import validate_against_oracle
+from repro.core.schema import AggSpec, KeyColumn, KeySpec
+from repro.core.types import (
+    EMPTY,
+    EMPTY64,
+    empty_key,
+    key_dtype_context,
+    rows_to_state,
+)
+
+RNG = np.random.default_rng(17)
+
+CFG_SMALL = ExecConfig(memory_rows=128, page_rows=32, fanin=4, batch_rows=32)
+
+
+# ---------------------------------------------------------------------------
+# KeySpec packing
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip(bit_widths, n=300, rng=RNG):
+    spec = KeySpec(tuple(KeyColumn(f"c{i}", b) for i, b in enumerate(bit_widths)))
+    cols = {
+        c.name: rng.integers(0, c.max_value, n, dtype=np.uint64, endpoint=True)
+        for c in spec.columns
+    }
+    # avoid the reserved all-ones combination
+    cols[spec.columns[0].name][cols[spec.columns[0].name] == spec.columns[0].max_value] = 0
+    packed = spec.pack(cols)
+    assert packed.dtype == spec.key_dtype
+    unpacked = spec.unpack(packed)
+    for name in spec.names:
+        np.testing.assert_array_equal(
+            unpacked[name].astype(np.uint64), cols[name].astype(np.uint64), err_msg=name
+        )
+    # packed order is the lexicographic order of the column list
+    order = np.lexsort(tuple(cols[n] for n in reversed(spec.names)))
+    np.testing.assert_array_equal(np.argsort(packed, kind="stable"), order)
+    return spec, packed
+
+
+def test_pack_roundtrip_32bit():
+    spec, packed = _roundtrip([12, 10, 10])  # exactly 32 bits
+    assert spec.key_dtype == np.uint32
+
+
+def test_pack_roundtrip_64bit():
+    spec, packed = _roundtrip([24, 24, 16])  # exactly 64 bits
+    assert spec.key_dtype == np.uint64
+
+
+def test_pack_roundtrip_odd_widths():
+    for widths in ([1, 1, 1], [5, 9, 4], [31, 1], [33], [20, 20, 20], [64]):
+        _roundtrip(widths)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 16), min_size=1, max_size=6), st.integers(0, 2**31))
+def test_pack_roundtrip_property(widths, seed):
+    """Hypothesis: n-column pack/unpack roundtrips at any total ≤ 64 bits."""
+    if sum(widths) > 64:
+        widths = widths[:2]
+    rng = np.random.default_rng(seed)
+    _roundtrip(widths, n=64, rng=rng)
+
+
+def test_sentinel_preserved_and_reserved():
+    """MAX_KEY-adjacent packings survive; the EMPTY pattern is rejected."""
+    spec = KeySpec.of(hi=40, lo=24)
+    # the largest legal packing: all-ones except the last bit == MAX_KEY64
+    packed = spec.pack({"hi": [(1 << 40) - 1], "lo": [(1 << 24) - 2]})
+    assert int(packed[0]) == int(np.uint64(0xFFFFFFFFFFFFFFFE))
+    with pytest.raises(ValueError, match="EMPTY"):
+        spec.pack({"hi": [(1 << 40) - 1], "lo": [(1 << 24) - 1]})
+    # EMPTY rows in an engine state survive a 64-bit groupby untouched
+    with key_dtype_context(np.uint64):
+        keys = np.array([5, EMPTY64, 5, 9], np.uint64)
+        st_ = sorted_ops.sorted_groupby(keys)
+        got = np.asarray(st_.keys)
+    assert (got == EMPTY64).sum() == 2  # sentinel never aggregates
+    assert set(got[got != EMPTY64].tolist()) == {5, 9}
+
+
+def test_keyspec_validation():
+    with pytest.raises(ValueError, match="at most 64"):
+        KeySpec.of(a=40, b=40)
+    with pytest.raises(ValueError, match="duplicate"):
+        KeySpec((KeyColumn("x", 4), KeyColumn("x", 4)))
+    with pytest.raises(ValueError, match="budget"):
+        KeySpec.of(a=4).pack({"a": [16]})
+    spec = KeySpec.of(a=8, b=8)
+    assert spec.prefix(1).names == ("a",)
+    assert spec.shift_of("a") == 8 and spec.shift_of("b") == 0
+
+
+# ---------------------------------------------------------------------------
+# AggSpec
+# ---------------------------------------------------------------------------
+
+
+def test_aggspec_planes():
+    assert AggSpec("count").plane_widths(3) == (0, 0, 0)
+    assert AggSpec("sum").plane_widths(3) == (3, 0, 0)
+    assert AggSpec("avg").plane_widths(2) == (2, 0, 0)  # avg ⇒ sum+count
+    assert AggSpec("min", "max").plane_widths(1) == (0, 1, 1)
+    assert AggSpec("count", "sum", "min", "max").plane_widths(2) == (2, 2, 2)
+    with pytest.raises(ValueError, match="unknown"):
+        AggSpec("median")
+
+
+def test_aggspec_finalize_avg():
+    keys = np.array([1, 1, 2, 2, 2], np.uint32)
+    vals = np.array([[2.0], [4.0], [3.0], [6.0], [9.0]], np.float32)
+    res = repro.aggregate(
+        {"k": keys}, by=KeySpec.of(k=8), values=vals, aggs=AggSpec("count", "avg")
+    )
+    rel = res.relation()
+    np.testing.assert_array_equal(rel["k"], [1, 2])
+    np.testing.assert_array_equal(rel["count"], [2, 3])
+    np.testing.assert_allclose(rel["avg"][:, 0], [3.0, 6.0], rtol=1e-6)
+    assert res.state.min.shape[1] == 0 and res.state.max.shape[1] == 0
+
+
+# ---------------------------------------------------------------------------
+# aggregate() oracle parity — the acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_aggregate_3col_over_32bits_matches_oracle(backend):
+    """3-column composite key exceeding 32 total bits vs the NumPy oracle
+    on both backends, through the external-memory path."""
+    n = 1000
+    spec = KeySpec.of(store=20, sku=20, region=10)  # 50 bits
+    cols = {
+        "store": RNG.integers(0, 50, n),
+        "sku": RNG.integers(0, 20, n),
+        "region": RNG.integers(0, 4, n),
+    }
+    vals = RNG.normal(size=(n, 1)).astype(np.float32)
+    res = repro.aggregate(
+        cols, by=spec, values=vals, aggs=("count", "sum"),
+        cfg=CFG_SMALL, output_estimate=800, backend=backend,
+    )
+    assert res.state.keys.dtype == jnp.uint64
+    validate_against_oracle(res.state, spec.pack(cols), vals)
+    assert res.stats.total_spill_rows > 0  # genuinely took the spill path
+    # result is sorted by the composite key: order_by any prefix is free
+    k = np.asarray(res.state.keys)
+    k = k[k != EMPTY64]
+    assert np.all(k[:-1] < k[1:])
+
+
+@pytest.mark.parametrize("algorithm", ["auto", "hash", "inmemory"])
+def test_aggregate_in_memory_64bit_all_algorithms(algorithm):
+    n = 400
+    spec = KeySpec.of(a=30, b=20)  # 50 bits
+    cols = {"a": RNG.integers(0, 100, n), "b": RNG.integers(0, 10, n)}
+    vals = RNG.normal(size=(n, 2)).astype(np.float32)
+    res = repro.aggregate(
+        cols, by=spec, values=vals, aggs=("count", "sum"),
+        algorithm=algorithm, order_by=True,
+    )
+    validate_against_oracle(res.state, spec.pack(cols), vals)
+    k = np.asarray(res.state.keys)
+    k = k[k != empty_key(k.dtype)]
+    assert np.all(k[:-1] < k[1:])  # sorted (order_by honored for every alg)
+
+
+def test_aggregate_order_by_must_be_prefix():
+    spec = KeySpec.of(a=8, b=8)
+    cols = {"a": [1, 2], "b": [3, 4]}
+    with pytest.raises(ValueError, match="prefix"):
+        repro.aggregate(cols, by=spec, order_by=("b",))
+    # a legal prefix passes
+    repro.aggregate(cols, by=spec, order_by=("a",))
+
+
+def test_aggregate_count_only_drops_payload_planes():
+    """AggSpec("count") carries no float plane anywhere — including spill."""
+    n = 600
+    keys = RNG.integers(0, 300, n).astype(np.uint32)
+    res = repro.aggregate(
+        {"k": keys}, by=KeySpec.of(k=16), values=np.ones((n, 4), np.float32),
+        aggs=("count",), cfg=CFG_SMALL, output_estimate=300,
+    )
+    assert res.state.widths == (0, 0, 0)
+    validate_against_oracle(res.state, keys)
+
+
+# ---------------------------------------------------------------------------
+# generic rollup
+# ---------------------------------------------------------------------------
+
+
+def test_generic_rollup_any_hierarchy_64bit():
+    """Rollup over a 3-level hierarchy wider than 32 bits: every level's
+    per-key sums match the NumPy oracle, all levels from one sort."""
+    n = 2000
+    spec = KeySpec.of(region=24, store=20, sku=10)  # 54 bits
+    cols = {
+        "region": RNG.integers(0, 3, n).astype(np.uint64),
+        "store": RNG.integers(0, 10, n).astype(np.uint64),
+        "sku": RNG.integers(0, 40, n).astype(np.uint64),
+    }
+    vals = np.ones((n, 1), np.float32)
+    levels, stats = repro.rollup(
+        cols, by=spec, values=vals, aggs=("count", "sum"),
+        cfg=CFG_SMALL, output_estimate=1200,
+    )
+    assert set(levels) == {
+        ("region", "store", "sku"), ("region", "store"), ("region",), ()
+    }
+    for names, res in levels.items():
+        # row conservation at every level
+        assert float(np.asarray(res.state.sum).sum()) == n
+        if names:
+            want = len({tuple(int(cols[c][i]) for c in names) for i in range(n)})
+        else:
+            want = 1
+        assert res.occupancy() == want, names
+    # per-key check at the middle level
+    mid = levels[("region", "store")]
+    rel = mid.relation()
+    oracle = {}
+    for i in range(n):
+        oracle.setdefault((int(cols["region"][i]), int(cols["store"][i])), 0)
+        oracle[(int(cols["region"][i]), int(cols["store"][i]))] += 1
+    got = {
+        (int(r), int(s)): int(c)
+        for r, s, c in zip(rel["region"], rel["store"], rel["count"])
+    }
+    assert got == oracle
+
+
+def test_rollup_narrow_prefix_relation_of_wide_key():
+    """Regression: a ≤32-bit prefix level of a uint64 rollup must not leak
+    EMPTY64 padding rows through relation() (the prefix KeySpec's uint32
+    sentinel differs from the engine state's)."""
+    n = 400
+    spec = KeySpec.of(region=24, store=20, sku=10)  # 54 bits
+    cols = {
+        "region": RNG.integers(0, 3, n),
+        "store": RNG.integers(0, 7, n),
+        "sku": RNG.integers(0, 11, n),
+    }
+    levels, _ = repro.rollup(cols, by=spec, values=np.ones((n, 1), np.float32))
+    top = levels[("region",)]  # 24-bit prefix spec over a uint64 state
+    rel = top.relation()
+    assert len(rel["region"]) == top.occupancy() == len(np.unique(cols["region"]))
+    assert rel["count"].sum() == n
+    total = levels[()]
+    rel0 = total.relation()
+    assert len(rel0["count"]) == 1 and rel0["count"][0] == n
+
+
+def test_hash_rejects_sentinel_colliding_key():
+    """Regression: the one key whose multiplicative hash IS the EMPTY
+    sentinel must fail loudly in the hash baselines (it would silently
+    vanish), at both key widths; the sort-based operator handles it."""
+    from repro.core.hash_agg import _KNUTH_INV, _KNUTH64_INV, hash_aggregate
+    from repro.core.types import EMPTY, EMPTY64
+
+    bad32 = np.uint32((int(EMPTY) * int(_KNUTH_INV)) % (1 << 32))
+    bad64 = np.uint64((int(EMPTY64) * int(_KNUTH64_INV)) % (1 << 64))
+    for bad in (bad32, bad64):
+        keys = np.array([1, 2, bad], dtype=bad.dtype)
+        with pytest.raises(ValueError, match="sentinel"):
+            hash_aggregate(keys)
+        st, _ = repro.core.group_by(keys)  # in-sort path: no restriction
+        validate_against_oracle(st, keys)
+
+
+def test_legacy_rollup_wrapper_unchanged():
+    """operators.rollup keeps its signature and its level names."""
+    from repro.core import rollup as legacy_rollup
+
+    n = 500
+    day = RNG.integers(1, 29, n).astype(np.uint32)
+    month = RNG.integers(1, 13, n).astype(np.uint32)
+    year = RNG.integers(0, 3, n).astype(np.uint32)
+    pay = np.ones((n, 1), np.float32)
+    levels, _ = legacy_rollup(day, month, year, pay, CFG_SMALL, output_estimate=1200)
+    assert set(levels) == {"day", "month", "year", "all"}
+    for name in levels:
+        assert float(np.asarray(levels[name].sum).sum()) == n
+        # regression: every level keeps full (N, V) value planes so legacy
+        # consumers can still read min/max columns
+        assert levels[name].sum.shape[1] == 1
+        assert levels[name].min.shape[1] == 1
+        assert levels[name].max.shape[1] == 1
+    assert int(levels["all"].occupancy()) == 1
+    assert int(levels["year"].occupancy()) == len(np.unique(year))
+
+
+# ---------------------------------------------------------------------------
+# intersect_distinct: merge probe instead of O(N·M) isin
+# ---------------------------------------------------------------------------
+
+
+def test_intersect_merge_probe_no_sort_no_isin():
+    from repro.core.operators import _merge_probe_intersect
+
+    ka = np.sort(RNG.choice(500, 80, replace=False)).astype(np.uint32)
+    kb = np.sort(RNG.choice(500, 120, replace=False)).astype(np.uint32)
+    jx = jax.make_jaxpr(_merge_probe_intersect)(jnp.asarray(ka), jnp.asarray(kb))
+    prims = {eqn.primitive.name for eqn in jx.jaxpr.eqns}
+    assert "sort" not in prims, prims
+    got = np.asarray(_merge_probe_intersect(jnp.asarray(ka), jnp.asarray(kb)))
+    got = got[got != EMPTY]
+    np.testing.assert_array_equal(got, np.intersect1d(ka, kb))
+
+
+# ---------------------------------------------------------------------------
+# backend default unification (satellite): "auto" everywhere
+# ---------------------------------------------------------------------------
+
+
+def test_operator_backend_defaults_are_auto():
+    import inspect
+
+    from repro.core import hash_agg, insort, operators, sorted_ops as so
+
+    for fn in (
+        operators.group_by,
+        insort.insort_aggregate,
+        insort.sort_then_stream_aggregate,
+        hash_agg.hash_aggregate,
+        hash_agg.f1_hash_aggregate,
+        so.sorted_groupby,
+        so.sort_state,
+        so.segmented_combine,
+        so.absorb,
+        so.merge_absorb,
+        so.merge_absorb_many,
+    ):
+        sig = inspect.signature(fn)
+        assert sig.parameters["backend"].default == "auto", fn.__name__
