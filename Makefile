@@ -6,15 +6,19 @@ export PYTHONPATH
 test:           ## tier-1 suite (property tests skip if hypothesis absent)
 	python -m pytest -x -q
 
-bench:          ## smoke-mode absorb + key-width benches (CI sanity)
+bench:          ## smoke-mode absorb + key-width + pipeline benches (CI sanity)
 	python benchmarks/bench_absorb.py --smoke
 	python benchmarks/bench_keywidth.py --smoke
+	python benchmarks/bench_pipeline.py --smoke
 
 bench-absorb:   ## sort-absorb vs merge-absorb microbenchmark
 	python benchmarks/bench_absorb.py
 
 bench-keywidth: ## uint32 vs uint64 absorb/merge throughput
 	python benchmarks/bench_keywidth.py
+
+bench-pipeline: ## host-loop vs device-resident end-to-end aggregate
+	python benchmarks/bench_pipeline.py
 
 bench-figures:  ## paper-figure benchmark driver
 	python benchmarks/run.py

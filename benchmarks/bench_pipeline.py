@@ -1,0 +1,142 @@
+"""End-to-end pipeline benchmark: host-orchestrated loop vs the fused
+device-resident program (run generation + wide merge in one compile).
+
+The host reference (:func:`repro.core.insort.insort_aggregate`,
+``pipeline="host"``) dispatches one jitted step per input batch and then
+**blocks on an occupancy readback** before deciding whether to flush a
+run — O(N/B) round trips.  The device pipeline
+(:func:`repro.core.pipeline.insort_aggregate_device`) runs the same
+policy as a single ``lax.scan`` fused with the wide merge — O(1) host
+syncs — so the gap between the two is pure orchestration overhead, and
+it widens with the batch count N/B.
+
+Sweeps N/M and the duplicate factor (mean rows per key) for the two
+production policies.  Writes ``BENCH_pipeline.json`` (repo root) unless
+``--smoke`` (CI sanity run: tiny sizes, no JSON unless --out is given).
+
+Usage:  PYTHONPATH=src python benchmarks/bench_pipeline.py
+            [--m 4096] [--ratios 2,8,32] [--dups 1,16] [--iters 3]
+            [--policies early_agg,rs] [--backend xla] [--out FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import pipeline
+from repro.core.insort import insort_aggregate
+from repro.core.types import ExecConfig
+
+_RUN_POLICY = {"early_agg": "batch", "rs": "rs"}  # host-loop spelling
+
+
+def _time(fn, iters: int) -> float:
+    out = fn()  # warmup: compile + caches
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--m", type=int, default=1 << 12, help="memory rows M")
+    p.add_argument("--ratios", type=str, default="2,8,32",
+                   help="comma-separated N/M ratios to sweep")
+    p.add_argument("--dups", type=str, default="1,16",
+                   help="duplicate factors (mean rows per key)")
+    p.add_argument("--policies", type=str, default="early_agg,rs")
+    p.add_argument("--iters", type=int, default=3)
+    p.add_argument("--width", type=int, default=1, help="payload columns V")
+    p.add_argument("--backend", type=str, default="xla",
+                   choices=("xla", "pallas", "auto"))
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sizes / few iters — CI sanity run, not a "
+                        "measurement; writes no JSON unless --out is given")
+    p.add_argument("--out", type=str, default=None,
+                   help="JSON output path (default: repo-root "
+                        "BENCH_pipeline.json; suppressed under --smoke)")
+    args = p.parse_args()
+    if args.smoke:
+        args.m, args.iters = 1 << 8, 1
+        args.ratios, args.dups, args.policies = "2,16", "4", "rs"
+
+    M = args.m
+    B = max(16, M // 8)  # N/B = 8 * (N/M)
+    cfg = ExecConfig(memory_rows=M, page_rows=max(16, M // 16), fanin=4,
+                     batch_rows=B)
+    rng = np.random.default_rng(0)
+    results = []
+    for policy in args.policies.split(","):
+        for ratio in (int(r) for r in args.ratios.split(",")):
+            for dup in (int(d) for d in args.dups.split(",")):
+                n = ratio * M
+                domain = max(1, n // dup)
+                keys = rng.integers(0, domain, n).astype(np.uint32)
+                pay = (rng.normal(size=(n, args.width)).astype(np.float32)
+                       if args.width else None)
+                # the optimizer estimate both paths plan their §4.3 merge
+                # depth from — exact here, so neither path under-merges
+                est = len(np.unique(keys))
+
+                def host():
+                    st, _ = insort_aggregate(
+                        keys, pay, cfg, run_policy=_RUN_POLICY[policy],
+                        backend=args.backend, pipeline="host",
+                        output_estimate=est,
+                    )
+                    return st.keys
+
+                def device():
+                    st, _ = pipeline.insort_aggregate_device(
+                        keys, pay, cfg, policy=policy, backend=args.backend,
+                        output_estimate=est,
+                    )
+                    return st.keys
+
+                t_host = _time(host, args.iters)
+                t_dev = _time(device, args.iters)
+                row = {
+                    "policy": policy, "n": n, "m": M, "b": B,
+                    "n_over_m": ratio, "n_over_b": n // B, "dup": dup,
+                    "host_s": t_host, "device_s": t_dev,
+                    "speedup": t_host / t_dev,
+                }
+                results.append(row)
+                print(f"{policy:10s} N/M={ratio:<3d} N/B={n // B:<4d} "
+                      f"dup={dup:<3d} host {t_host * 1e3:8.1f} ms   "
+                      f"device {t_dev * 1e3:8.1f} ms   "
+                      f"speedup {row['speedup']:.2f}x")
+
+    report = {
+        "bench": "pipeline_host_vs_device",
+        "backend": args.backend,
+        "jax_device": jax.default_backend(),
+        "config": {"memory_rows": M, "batch_rows": B,
+                   "page_rows": cfg.page_rows, "iters": args.iters,
+                   "payload_width": args.width},
+        "results": results,
+    }
+    out = args.out
+    if out is None and not args.smoke:
+        out = str(pathlib.Path(__file__).resolve().parent.parent
+                  / "BENCH_pipeline.json")
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {out}")
+    wins = [r for r in results if r["n_over_b"] >= 16]
+    if wins and all(r["speedup"] > 1.0 for r in wins):
+        print("device pipeline wins at every N/B >= 16")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 test entry point: the one command CI and contributors run.
+#
+#   scripts/test.sh               full tier-1 suite
+#   scripts/test.sh --pipeline    fast selector: device-pipeline parity +
+#                                 transfer-guard tests, then the smoke-mode
+#                                 benches (so benchmark code cannot rot)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--pipeline" ]]; then
+  shift
+  python -m pytest -x -q tests/test_pipeline.py "$@"
+  make bench
+  exit 0
+fi
+
 exec python -m pytest -x -q "$@"

@@ -6,6 +6,7 @@ module, plus the baselines it is measured against.
 """
 from repro.core.types import (
     AggState,
+    DeviceSpillStats,
     ExecConfig,
     SpillStats,
     EMPTY,
@@ -31,6 +32,8 @@ from repro.core.sorted_ops import (
     finalize,
     sort_state,
     segmented_combine,
+    interleave,
+    interleave_many,
     merge_absorb,
     merge_absorb_many,
 )
@@ -54,10 +57,16 @@ from repro.core.schema import (
     KeySpec,
     aggregate,
 )
+from repro.core.pipeline import (
+    aggregate_device,
+    generate_runs_device,
+    insort_aggregate_device,
+)
 from repro.core import cost_model
 
 __all__ = [
     "AggState",
+    "DeviceSpillStats",
     "ExecConfig",
     "SpillStats",
     "EMPTY",
@@ -85,9 +94,14 @@ __all__ = [
     "finalize",
     "sort_state",
     "segmented_combine",
+    "interleave",
+    "interleave_many",
     "merge_absorb",
     "merge_absorb_many",
     "insort_aggregate",
+    "aggregate_device",
+    "generate_runs_device",
+    "insort_aggregate_device",
     "sort_then_stream_aggregate",
     "hash_aggregate",
     "f1_hash_aggregate",

@@ -50,12 +50,18 @@ class Backend:
         Must not perform a full sort of the union.  ``assume_unique``
         promises both inputs are duplicate-free (the OrderedIndex
         invariant), licensing a cheaper pair-combine.
+    ``interleave(a, b) -> state`` (optional)
+        Linear merge of two *key-sorted* AggStates WITHOUT combining
+        duplicates — the raw sorted multiset union (traditional merge
+        levels that defer aggregation need exactly this).  ``None``
+        means the engine falls back to the XLA rank-gather interleave.
     """
 
     name: str
     argsort: Callable
     segmented_combine: Callable
     merge_sorted: Callable
+    interleave: Callable | None = None
 
 
 _loaders: dict[str, Callable[[], Backend]] = {}
@@ -138,6 +144,7 @@ def _load_xla() -> Backend:
         argsort=jnp.argsort,
         segmented_combine=oi.segmented_combine_xla,
         merge_sorted=oi.merge_absorb_xla,
+        interleave=oi.interleave_sorted,
     )
 
 
@@ -151,6 +158,9 @@ def _load_pallas() -> Backend:
         argsort=kops.argsort_keys,
         segmented_combine=kops.segmented_combine,
         merge_sorted=kops.merge_absorb_sorted,
+        # no fused non-combining merge kernel yet: the rank-gather
+        # interleave is memory-bound and the XLA fallback serves it
+        interleave=None,
     )
 
 

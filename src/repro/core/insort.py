@@ -56,6 +56,7 @@ def insort_aggregate(
     run_policy: str = "rs",
     backend: str = "auto",
     widths: tuple[int, int, int] | None = None,
+    pipeline: str = "host",
 ) -> tuple[AggState, SpillStats]:
     """Group/aggregate an unsorted stream under a memory budget of M rows.
 
@@ -66,9 +67,30 @@ def insort_aggregate(
       external merge sort + in-stream aggregation (Fig 2 top) when
       combined with ``policy='traditional'`` semantics, or Bitton/DeWitt
       in-run dedup (Fig 2 bottom).
+
+    ``pipeline`` selects the executor: ``"host"`` (default here) is the
+    reference loop with exact per-level accounting; ``"device"`` routes
+    to the fused scan-based program of :mod:`repro.core.pipeline` (O(1)
+    host syncs; the §4.3 pre-wide merge levels are planned statically
+    from ``output_estimate`` and run on device too).  Plans the fused
+    program cannot express (``use_wide_merge=False``) always run on the
+    host loop.
     """
     cfg = cfg or ExecConfig()
     backend = dispatch.resolve_backend_name(backend)  # "auto" → concrete
+    if pipeline not in ("host", "device"):
+        raise ValueError(f"unknown pipeline {pipeline!r}; expected host|device")
+    if pipeline == "device" and use_wide_merge:
+        from repro.core import pipeline as pipeline_mod
+
+        if early_aggregation:
+            policy = "rs" if run_policy == "rs" else "early_agg"
+        else:
+            policy = "inrun_dedup"
+        return pipeline_mod.insort_aggregate_device(
+            keys, payload, cfg, policy=policy, backend=backend, widths=widths,
+            output_estimate=output_estimate,
+        )
     keys = rg._np_keys(keys)
     with key_dtype_context(keys):
         if early_aggregation and run_policy == "rs":

@@ -97,13 +97,36 @@ def _page_of(store_state: AggState, r, start, page_rows: int) -> AggState:
 
 
 @functools.partial(jax.jit, static_argnames=("aggregate", "backend"))
-def _merge_group(state: AggState, *, aggregate: bool, backend="xla"):
-    out = (
-        sorted_ops.absorb(state, backend=backend)
-        if aggregate
-        else sorted_ops.sort_state(state, backend=backend)
-    )
+def _merge_group(states: tuple[AggState, ...], *, aggregate: bool, backend="xla"):
+    """Merge a group of **already-sorted** runs with a balanced tree of
+    linear merges — the runs carry the sorted invariant from run
+    generation, so the former concat + full-argsort of the union was pure
+    waste.  ``aggregate=True`` combines duplicates as it merges (the
+    shared :func:`sorted_ops.merge_absorb_many` tree); ``aggregate=False``
+    keeps the raw sorted multiset (a tree of interleaves) for merge plans
+    that defer aggregation (Fig 2 top)."""
+    states = list(states)
+    if len(states) == 1 and aggregate:
+        # a lone run may still carry intra-run duplicates (traditional
+        # policy): combining a sorted state needs no merge at all
+        out = sorted_ops.segmented_combine(states[0], backend=backend)
+        return out, out.occupancy()
+    if aggregate:
+        out = sorted_ops.merge_absorb_many(states, backend=backend)
+    else:
+        out = sorted_ops.interleave_many(states, backend=backend)
     return out, out.occupancy()
+
+
+def _pad_group(states: tuple[AggState, ...]) -> tuple[AggState, ...]:
+    """Pad group members to their common max capacity before the jitted
+    merge tree: heterogeneous run lengths (replacement selection) would
+    otherwise key a fresh compilation on every distinct capacity tuple."""
+    cap = max(s.capacity for s in states)
+    return tuple(
+        s if s.capacity == cap else concat_states(s, empty_like(s, cap - s.capacity))
+        for s in states
+    )
 
 
 def traditional_merge(
@@ -130,11 +153,9 @@ def traditional_merge(
             if len(group) == 1:  # singleton: carried over, no re-write I/O
                 nxt.append(group[0])
                 continue
-            cat = jax.tree.map(
-                lambda *xs: jnp.concatenate(xs, axis=0), *[g.state for g in group]
-            )
             merged, occ = _merge_group(
-                cat, aggregate=aggregate_during_merge, backend=backend
+                _pad_group(tuple(g.state for g in group)),
+                aggregate=aggregate_during_merge, backend=backend,
             )
             length = int(occ)
             nxt.append(Run(state=merged, length=length))
@@ -157,8 +178,10 @@ def final_merge_traditional(
         runs, cfg, aggregate_during_merge=aggregate, stats=stats, backend=backend,
         stop_at=cfg.fanin,
     )
-    cat = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *[r.state for r in runs])
-    out, _ = _merge_group(cat, aggregate=True, backend=backend)  # output phase
+    # output phase: one last merge tree, aggregating in-stream
+    out, _ = _merge_group(
+        _pad_group(tuple(r.state for r in runs)), aggregate=True, backend=backend
+    )
     stats.merge_steps += 1
     stats.merge_levels += 1
     return out
@@ -169,8 +192,7 @@ def final_merge_traditional(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("page_rows", "index_rows", "out_capacity", "backend"))
-def _wide_merge_jit(
+def wide_merge_device(
     store_state: AggState,
     lens: jax.Array,
     *,
@@ -179,6 +201,14 @@ def _wide_merge_jit(
     out_capacity: int,
     backend: str = "xla",
 ):
+    """Traceable core of the wide merge (§4): page loop as a
+    ``lax.while_loop`` over a stacked run store.  Jit-wrapped by
+    :func:`wide_merge` for standalone use and inlined into the fused
+    device-resident pipeline (:mod:`repro.core.pipeline`) so run
+    generation + merge compile to ONE program.  Returns device scalars
+    ``(out, rows_emitted, pages_read, max_index_occupancy, overflow,
+    dropped)`` — no host syncs; ``dropped`` is the hard failure signal
+    (live rows trimmed), ``overflow`` the soft model-exceeded flag."""
     R, C = store_state.keys.shape
     P = page_rows
     W = index_rows + P  # index tile + headroom for one incoming page
@@ -256,7 +286,16 @@ def _wide_merge_jit(
     cursors, index, out, out_cur, pages_read, max_occ, overflow = jax.lax.while_loop(
         cond, body, carry
     )
-    return out, out_cur, pages_read, max_occ, overflow
+    # resident > W means the left-shift trim cut live rows: that is data
+    # loss, not just "more memory than the model allows" (the soft
+    # `overflow` flag at resident > index_rows).  Callers must fail loudly.
+    dropped = max_occ > W
+    return out, out_cur, pages_read, max_occ, overflow, dropped
+
+
+_wide_merge_jit = functools.partial(
+    jax.jit, static_argnames=("page_rows", "index_rows", "out_capacity", "backend")
+)(wide_merge_device)
 
 
 def wide_merge(
@@ -278,13 +317,20 @@ def wide_merge(
         store = stack_runs(runs, cfg.page_rows, width)
         if out_capacity is None:
             out_capacity = int(sum(r.length for r in runs))
-        out, out_cur, pages_read, max_occ, overflow = _wide_merge_jit(
+        out, out_cur, pages_read, max_occ, overflow, dropped = _wide_merge_jit(
             store.state,
             store.lens,
             page_rows=cfg.page_rows,
             index_rows=index_rows or cfg.memory_rows,
             out_capacity=out_capacity,
             backend=backend,
+        )
+    if bool(dropped):
+        raise RuntimeError(
+            "wide-merge index overflowed its capacity and dropped rows "
+            f"(resident {int(max_occ)} > index_rows + page_rows); merge "
+            "fewer runs at once (pre-merge levels / larger output "
+            "estimate) or raise index_rows"
         )
     stats.merge_steps += 1
     stats.merge_levels += 1

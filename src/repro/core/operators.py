@@ -70,6 +70,7 @@ def group_by(
     output_estimate: int | None = None,
     backend: str = "auto",
     widths: tuple[int, int, int] | None = None,
+    pipeline: str = "device",
 ) -> tuple[AggState, SpillStats]:
     """Duplicate removal / grouping / aggregation of an unsorted input.
 
@@ -78,12 +79,17 @@ def group_by(
     Keys may be uint32 or (for composite keys packed by
     :class:`repro.core.schema.KeySpec`) uint64; ``repro.aggregate`` is
     the schema-level front door over this dispatch.
+
+    The in-sort algorithm runs on the device-resident fused pipeline by
+    default (``pipeline="device"``: one compiled program, O(1) host
+    syncs); ``pipeline="host"`` selects the reference loop with the
+    paper's exact per-merge-level accounting.
     """
     cfg = cfg or ExecConfig()
     if algorithm in ("auto", "insort"):
         return insort_mod.insort_aggregate(
             keys, payload, cfg, output_estimate=output_estimate, backend=backend,
-            widths=widths,
+            widths=widths, pipeline=pipeline,
         )
     if algorithm == "hash":
         return hash_mod.hash_aggregate(

@@ -12,12 +12,15 @@ merge**, vectorized for XLA:
   key vectors in their merged order, via two ``searchsorted`` rank
   computations (each row binary-searches the *other* side once; no sort
   of the union ever happens).
-* :func:`interleave_sorted` — scatter both states through those ranks:
-  the ranks are a permutation of ``range(|a|+|b|)``, so one scatter per
-  column produces the merged, still-sorted union.
+* :func:`interleave_sorted` — gather both states through those ranks:
+  the ranks are a permutation of ``range(|a|+|b|)``, inverted by one more
+  binary search, so one gather per column produces the merged,
+  still-sorted union.
 * :func:`merge_absorb_xla` — interleave + segmented combine: equal keys
   are adjacent after the merge, so the b-tree "absorb" is the same
-  segmented combine used everywhere else.
+  segmented combine used everywhere else.  The combine itself is a
+  segmented associative scan + compaction gather, so the whole XLA
+  merge-absorb path emits **no sort and no scatter**.
 
 The :class:`OrderedIndex` wrapper carries the engine invariant **in the
 type**:
@@ -113,37 +116,55 @@ def interleave_sorted(a: AggState, b: AggState) -> AggState:
 # ---------------------------------------------------------------------------
 
 
-def _segment_ids(sorted_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """(head flags, segment index) for a key-sorted vector; EMPTY rows get
-    an out-of-range segment so scatters drop them."""
-    n = sorted_keys.shape[0]
-    valid = sorted_keys != empty_key(sorted_keys.dtype)
-    neq = jnp.concatenate(
-        [jnp.ones((1,), dtype=bool), sorted_keys[1:] != sorted_keys[:-1]]
+def _segmented_scan_xla(state: AggState) -> tuple[AggState, jax.Array]:
+    """Inclusive segmented scan over a key-sorted state: row i holds the
+    aggregate of its segment's prefix, so segment *tails* hold complete
+    group aggregates.  Returns (scanned state, tail mask).
+
+    This is the XLA rendering of the flag-based segmented scan the Pallas
+    kernel uses (:mod:`repro.kernels.segmented_reduce`): a single
+    ``lax.associative_scan`` over (restart-flag, count, sum, min, max)
+    tuples — log-depth slices and elementwise combines, **no scatter**.
+    """
+    k = state.keys
+    valid = k != empty_key(k.dtype)
+    same_prev = jnp.concatenate([jnp.zeros((1,), bool), k[1:] == k[:-1]]) & valid
+    starts = ~same_prev  # EMPTY rows restart too: they never join a group
+
+    def comb(a, b):
+        fa, ca, sa, mna, mxa = a
+        fb, cb, sb, mnb, mxb = b
+        keep = fb  # b starts a new segment ⇒ discard a's running aggregate
+        kcol = keep[..., None]
+        return (
+            fa | fb,
+            jnp.where(keep, cb, ca + cb),
+            jnp.where(kcol, sb, sa + sb),
+            jnp.where(kcol, mnb, jnp.minimum(mna, mnb)),
+            jnp.where(kcol, mxb, jnp.maximum(mxa, mxb)),
+        )
+
+    _, cnt, ssum, smin, smax = jax.lax.associative_scan(
+        comb, (starts, state.count, state.sum, state.min, state.max)
     )
-    heads = neq & valid
-    seg = jnp.cumsum(heads.astype(jnp.int32)) - 1
-    seg = jnp.where(valid, seg, n)  # out-of-range ⇒ dropped by scatters
-    return heads, seg
+    tails = jnp.concatenate([k[1:] != k[:-1], jnp.ones((1,), bool)]) & valid
+    return AggState(k, cnt, ssum, smin, smax), tails
 
 
 def segmented_combine_xla(state: AggState) -> AggState:
     """Combine adjacent equal-key rows of a key-sorted state.
 
     Output keeps the input capacity: unique groups are compacted to the
-    front (still sorted), the tail is EMPTY.
+    front (still sorted), the tail is EMPTY.  Implemented scatter-free: a
+    segmented associative scan leaves each group's aggregate at its tail
+    row, and the tails are compacted to the front with the same
+    cumsum-invert *gather* used everywhere else (:func:`_compact_rows`) —
+    scatters are the expensive primitive on every backend.
     """
-    n = state.capacity
-    heads, seg = _segment_ids(state.keys)
-    kd = state.keys.dtype
-    out_keys = jnp.full((n,), empty_key(kd), dtype=kd).at[seg].set(
-        state.keys, mode="drop"
-    )
-    count = jnp.zeros((n,), jnp.int32).at[seg].add(state.count, mode="drop")
-    ssum = jnp.zeros_like(state.sum).at[seg].add(state.sum, mode="drop")
-    smin = jnp.full_like(state.min, _INF).at[seg].min(state.min, mode="drop")
-    smax = jnp.full_like(state.max, -_INF).at[seg].max(state.max, mode="drop")
-    return AggState(keys=out_keys, count=count, sum=ssum, min=smin, max=smax)
+    if state.capacity == 0:
+        return state
+    scanned, tails = _segmented_scan_xla(state)
+    return _compact_rows(scanned, tails)
 
 
 def _compact_rows(state: AggState, keep: jax.Array) -> AggState:

@@ -1,0 +1,600 @@
+"""Device-resident external aggregation pipeline: scan-based run
+generation fused with the wide merge into ONE compiled program.
+
+The host drivers in :mod:`repro.core.run_generation` mirror the paper's
+I/O loop: dispatch one jitted step per batch, then **block on an
+occupancy readback** to decide whether to flush a run.  That round trip
+— not comparisons — dominates once the per-record work is vectorized
+(cf. the external-sort implementation studies in PAPERS.md), so the
+external pipeline runs at host-latency instead of hardware speed.
+
+This module removes the host from the loop.  All three read-sort-write
+policies (``traditional``, ``inrun_dedup``, ``early_agg``) and
+replacement selection (``rs``) run as a single jitted ``lax.scan`` over
+the pre-batched input:
+
+* runs are written into a preallocated, stacked RunStore-shaped device
+  buffer via a data-dependent run-slot index carried through the scan
+  (out-of-range slots drop, so "don't flush" is a no-op scatter);
+* occupancy, spill counters, and the replacement-selection frontier are
+  device carries; eviction is a bounded inner ``while_loop`` in the scan
+  body (the same :func:`~repro.core.run_generation.rs_split_absorb` /
+  :func:`~repro.core.run_generation.rs_evict_step` state machine as the
+  host reference);
+* the §4.3 pre-wide traditional merge levels (needed when O/M exceeds
+  the fan-in, or the wide merge's index outgrows memory) are planned
+  statically from the output estimate and run on device as pairwise
+  linear merges over run slots (:func:`_device_premerge`);
+* the wide merge (§4) consumes the run buffer directly
+  (:func:`repro.core.merge.wide_merge_device`), so
+  ``repro.aggregate(..., algorithm="insort")`` compiles end-to-end;
+* spill accounting is a :class:`~repro.core.types.DeviceSpillStats`
+  pytree — the only host synchronization in the whole pipeline is the
+  final ``finalize()`` readback of stats + run lengths.
+
+Sizing is static, derived from shapes alone: a run buffer of
+``ceil(N/M)+O(1)`` slots (every flushed run carries > M unique rows, so
+the slot count is bounded by input over memory), each slot page-aligned.
+The batch count is bucketed to the next power of two (EMPTY batches are
+no-ops) so recompiles scale with log(N), not N.
+
+The host loops remain the reference path for oracle-parity testing and
+for the paper's exact per-level accounting (Fig 14); the device
+pre-merge accounting deviates from the host's only for non-power-of-two
+fan-ins and over-estimated run counts (it plans levels from the static
+slot bound rather than the dynamic run count).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch
+from repro.core import merge as merge_mod
+from repro.core import run_generation as rg
+from repro.core import sorted_ops
+from repro.core.types import (
+    AggState,
+    DeviceSpillStats,
+    ExecConfig,
+    SpillStats,
+    as_key_array,
+    concat_states,
+    empty_key,
+    empty_like,
+    empty_state,
+    key_dtype_context,
+    rows_to_state,
+)
+
+POLICIES = ("traditional", "inrun_dedup", "early_agg", "rs")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _num_batches(n: int, chunk: int) -> int:
+    """Batch count bucketed to the next power of two (EMPTY-padded batches
+    are no-ops) so distinct input sizes share compilations."""
+    t = (n + chunk - 1) // chunk
+    return 1 << (t - 1).bit_length() if t > 1 else t
+
+
+def _batch(keys, payload, chunk: int, t: int):
+    """(traced) EMPTY/zero-pad the flat input to ``t * chunk`` rows and
+    reshape into scan batches — device-side, no host transfer."""
+    n = keys.shape[0]
+    padn = t * chunk - n
+    kd = keys.dtype
+    keys = jnp.concatenate([keys, jnp.full((padn,), empty_key(kd), kd)])
+    bk = keys.reshape(t, chunk)
+    bp = None
+    if payload is not None:
+        pad = jnp.zeros((padn,) + payload.shape[1:], payload.dtype)
+        bp = jnp.concatenate([payload, pad]).reshape(t, chunk, payload.shape[1])
+    return bk, bp
+
+
+def _stacked_empty(slots: int, rows: int, width: int, *, key_dtype, widths):
+    proto = empty_state(rows, width, key_dtype=key_dtype, widths=widths)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (slots,) + x.shape), proto)
+
+
+def _pad_rows(state: AggState, rows: int) -> AggState:
+    if state.capacity >= rows:
+        return state
+    return concat_states(state, empty_like(state, rows - state.capacity))
+
+
+# ---------------------------------------------------------------------------
+# run generation as a lax.scan, per policy
+# ---------------------------------------------------------------------------
+
+
+def _rungen_sortwrite(bk, bp, *, dedup: bool, C: int, backend: str, widths):
+    """``traditional`` / ``inrun_dedup``: one run per M-row chunk.  The
+    run-slot index is the scan step itself, so runs stream out as stacked
+    scan outputs — no carried buffer needed."""
+
+    def body(carry, xs):
+        ck, cp = xs
+        st = rows_to_state(ck, cp, widths=widths)
+        if dedup:
+            st = sorted_ops.absorb(st, backend=backend)
+        else:
+            st = sorted_ops.sort_state(st, backend=backend)
+        occ = st.occupancy()
+        return carry, (_pad_rows(st, C), occ)
+
+    _, (store, lens) = jax.lax.scan(body, jnp.int32(0), (bk, bp))
+    spilled = jnp.sum(lens, dtype=jnp.int32)
+    nruns = jnp.sum(lens > 0, dtype=jnp.int32)
+    kd = bk.dtype
+    width = 0 if bp is None else bp.shape[-1]
+    table = empty_state(0, width, key_dtype=kd, widths=widths)
+    return store, lens, table, spilled, nruns, jnp.bool_(False)
+
+
+def _rungen_early_agg(bk, bp, *, M: int, R: int, C: int, backend: str, widths):
+    """``early_agg`` (§3): the ordered in-memory index absorbs each sorted
+    batch; when occupancy exceeds M the whole index content is written to
+    the run slot carried in the scan and memory restarts empty."""
+    t, B = bk.shape
+    kd = bk.dtype
+    width = 0 if bp is None else bp.shape[-1]
+    ws = widths if widths is not None else (width, width, width)
+    table0 = empty_state(M, width, key_dtype=kd, widths=ws)
+    buf0 = _stacked_empty(R, C, width, key_dtype=kd, widths=ws)
+    lens0 = jnp.zeros((R,), jnp.int32)
+
+    def body(carry, xs):
+        table, buf, lens, ridx, spilled = carry
+        ck, cp = xs
+        batch = sorted_ops.absorb(rows_to_state(ck, cp, widths=ws), backend=backend)
+        merged = sorted_ops.merge_absorb(
+            table, batch, backend=backend, assume_unique=True
+        )  # capacity M + B
+        occ = merged.occupancy()
+        flush = occ > M
+        # memory full: the entire index content becomes one sorted run in
+        # the carried slot; otherwise the (out-of-range) write drops.
+        slot = jnp.where(flush, ridx, R)
+        buf = jax.tree.map(
+            lambda d, s: d.at[slot].set(s, mode="drop"), buf, _pad_rows(merged, C)
+        )
+        lens = lens.at[slot].set(occ, mode="drop")
+        ridx = ridx + flush.astype(jnp.int32)
+        spilled = spilled + jnp.where(flush, occ, 0)
+        kept = jax.tree.map(lambda x: x[:M], merged)  # trim back to M
+        table = jax.tree.map(lambda e, k: jnp.where(flush, e, k), table0, kept)
+        return (table, buf, lens, ridx, spilled), None
+
+    init = (table0, buf0, lens0, jnp.int32(0), jnp.int32(0))
+    (table, buf, lens, ridx, spilled), _ = jax.lax.scan(body, init, (bk, bp))
+    # mirror the resident table into the next slot so a downstream wide
+    # merge always consumes the complete picture; it counts as a spilled
+    # run only when earlier slots spilled (host-reference semantics).
+    occ_t = table.occupancy()
+    buf = jax.tree.map(
+        lambda d, s: d.at[ridx].set(s, mode="drop"), buf, _pad_rows(table, C)
+    )
+    lens = lens.at[ridx].set(occ_t, mode="drop")
+    spilled = spilled + jnp.where(ridx > 0, occ_t, 0)
+    nruns = ridx + ((ridx > 0) & (occ_t > 0)).astype(jnp.int32)
+    overflow = ridx + 1 > R
+    return buf, lens, table, jnp.where(ridx > 0, spilled, 0), nruns, overflow
+
+
+def _rungen_rs(bk, bp, *, M: int, B: int, R: int, C: int, backend: str, widths):
+    """Replacement selection (§3.3) folded into the scan: the two-table
+    partitioned b-tree is the carry, and the eviction scan is a bounded
+    inner ``while_loop`` writing B-row quanta at the carried
+    (run-slot, cursor) position.  A run closes when the open partition
+    drains (host semantics) or when its slot is within one quantum of
+    capacity (the device buffer's close-early rule — always legal, runs
+    only need to be sorted)."""
+    t, _B = bk.shape
+    kd = bk.dtype
+    width = 0 if bp is None else bp.shape[-1]
+    ws = widths if widths is not None else (width, width, width)
+    cap = M + 2 * B
+    table0 = empty_state(cap, width, key_dtype=kd, widths=ws)
+    buf0 = _stacked_empty(R, C, width, key_dtype=kd, widths=ws)
+    lens0 = jnp.zeros((R,), jnp.int32)
+    arB = jnp.arange(B, dtype=jnp.int32)
+    arC = jnp.arange(cap, dtype=jnp.int32)
+
+    def close_fn(c):
+        # the open run is exhausted (or its slot is full): record its
+        # length, then merge both partitions into a fresh open partition —
+        # with occ_r == 0 this is exactly the host's promote-next-table.
+        rt, nt, frontier, buf, lens, cursor, ridx, spilled = c
+        lens = lens.at[jnp.where(cursor > 0, ridx, R)].set(cursor, mode="drop")
+        ridx = ridx + (cursor > 0).astype(jnp.int32)
+        rt = jax.tree.map(
+            lambda x: x[:cap],
+            sorted_ops.merge_absorb(rt, nt, backend=backend, assume_unique=True),
+        )
+        return (rt, table0, jnp.zeros((), kd), buf, lens, jnp.int32(0), ridx, spilled)
+
+    def evict_fn(c):
+        rt, nt, frontier, buf, lens, cursor, ridx, spilled = c
+        evicted, rest, frontier, n_ev = rg.rs_evict_step(rt, B)
+        rows = cursor + arB
+        buf = jax.tree.map(
+            lambda d, s: d.at[ridx, rows].set(s, mode="drop"), buf, evicted
+        )
+        return (rest, nt, frontier, buf, lens, cursor + n_ev, ridx, spilled + n_ev)
+
+    def overflow_step(c):
+        rt = c[0]
+        cursor = c[5]
+        return jax.lax.cond(
+            (rt.occupancy() == 0) | (cursor + B > C), close_fn, evict_fn, c
+        )
+
+    def overflow_cond(c):
+        rt, nt = c[0], c[1]
+        return rt.occupancy() + nt.occupancy() > M
+
+    def body(carry, xs):
+        rt, nt, frontier, buf, lens, cursor, ridx, spilled = carry
+        ck, cp = xs
+        batch = sorted_ops.absorb(rows_to_state(ck, cp, widths=ws), backend=backend)
+        rt, nt = rg.rs_split_absorb(rt, nt, frontier, batch, backend=backend)
+        carry = jax.lax.while_loop(
+            overflow_cond, overflow_step,
+            (rt, nt, frontier, buf, lens, cursor, ridx, spilled),
+        )
+        return carry, None
+
+    init = (
+        table0, table0, jnp.zeros((), kd), buf0, lens0,
+        jnp.int32(0), jnp.int32(0), jnp.int32(0),
+    )
+    (rt, nt, frontier, buf, lens, cursor, ridx, spilled), _ = jax.lax.scan(
+        body, init, (bk, bp)
+    )
+
+    # drain: finish the open run with the open partition's remainder (its
+    # own slot when there is room, the next slot otherwise), then write
+    # the next-run partition as the last run.
+    occ_r = rt.occupancy()
+    occ_n = nt.occupancy()
+    evicted_any = (ridx > 0) | (cursor > 0)
+
+    def drain_append(args):
+        buf, lens, ridx = args
+        buf = jax.tree.map(
+            lambda d, s: d.at[ridx, cursor + arC].set(s, mode="drop"), buf, rt
+        )
+        ln = cursor + occ_r
+        lens = lens.at[jnp.where(ln > 0, ridx, R)].set(ln, mode="drop")
+        return buf, lens, ridx + (ln > 0).astype(jnp.int32)
+
+    def drain_split(args):
+        buf, lens, ridx = args
+        lens = lens.at[ridx].set(cursor, mode="drop")  # cursor > 0 here
+        ridx = ridx + 1
+        buf = jax.tree.map(
+            lambda d, s: d.at[ridx, arC].set(s, mode="drop"), buf, rt
+        )
+        lens = lens.at[jnp.where(occ_r > 0, ridx, R)].set(occ_r, mode="drop")
+        return buf, lens, ridx + (occ_r > 0).astype(jnp.int32)
+
+    buf, lens, ridx = jax.lax.cond(
+        cursor + occ_r <= C, drain_append, drain_split, (buf, lens, ridx)
+    )
+    buf = jax.tree.map(lambda d, s: d.at[ridx, arC].set(s, mode="drop"), buf, nt)
+    lens = lens.at[jnp.where(occ_n > 0, ridx, R)].set(occ_n, mode="drop")
+    ridx = ridx + (occ_n > 0).astype(jnp.int32)
+    spilled = spilled + occ_r + occ_n
+    nruns = jnp.where(evicted_any, ridx, 0)
+    overflow = ridx > R
+    return buf, lens, rt, jnp.where(evicted_any, spilled, 0), nruns, overflow
+
+
+# ---------------------------------------------------------------------------
+# the fused program
+# ---------------------------------------------------------------------------
+
+
+def _slots_for(n_pad: int, M: int, extra: int) -> int:
+    # every closed run carries > M unique rows (early-agg flushes at
+    # occupancy > M; every RS run drains a partition that held > M rows),
+    # so input-over-memory bounds the slot count.
+    return n_pad // (M + 1) + extra
+
+
+def _static_run_slots(policy: str, n: int, M: int, B: int) -> int:
+    """Run-slot bound from shapes alone (host-side twin of the sizing in
+    :func:`_pipeline_jit`, used to plan pre-merge levels statically)."""
+    chunk = M if policy in ("traditional", "inrun_dedup") else B
+    t = _num_batches(n, chunk)
+    if policy in ("traditional", "inrun_dedup"):
+        return t
+    return _slots_for(t * chunk, M, 2 if policy == "early_agg" else 4)
+
+
+def _pad_slots(store: AggState, lens, R_new: int):
+    R, C = store.keys.shape
+    widths = (store.sum.shape[-1], store.min.shape[-1], store.max.shape[-1])
+    extra = _stacked_empty(
+        R_new - R, C, max(widths), key_dtype=store.keys.dtype, widths=widths
+    )
+    store = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), store, extra)
+    lens = jnp.concatenate([lens, jnp.zeros((R_new - R,), jnp.int32)])
+    return store, lens
+
+
+def _device_premerge(store: AggState, lens, *, fanin: int, levels: int, backend: str):
+    """§4.3 pre-wide traditional merge levels, on device.
+
+    Each level merges groups of ``2^ceil(log2 F)`` run slots as a
+    balanced tree of pairwise linear merge-absorbs (``lax.map`` over slot
+    pairs; each pass halves the slot count and doubles slot capacity, so
+    the buffer footprint is constant).  Empty slots merge as no-ops, so
+    the statically planned level count is safe whatever the dynamic run
+    count.  Spill accounting matches the host planner: a group's merged
+    output counts as merge spill only if the group actually combined ≥ 2
+    live runs (singletons are carried, not rewritten).  For non-power-of-
+    two fan-ins the effective group width rounds up to the next power of
+    two (slightly fewer, wider groups than the host reference).
+    """
+    spilled = jnp.int32(0)
+    steps = jnp.int32(0)
+    nlev = jnp.int32(0)
+    sub = max(1, (fanin - 1).bit_length())  # pairwise passes per level
+    G = 1 << sub
+    for _ in range(levels):
+        R = store.keys.shape[0]
+        if R <= 1:
+            break
+        Rpad = _round_up(R, G)
+        if Rpad > R:
+            store, lens = _pad_slots(store, lens, Rpad)
+        sizes = jnp.sum(lens.reshape(-1, G) > 0, axis=1, dtype=jnp.int32)
+        for _ in range(sub):
+
+            def step(pair):
+                sa, sb = pair
+                m = sorted_ops.merge_absorb(sa, sb, backend=backend)
+                return m, m.occupancy()
+
+            a = jax.tree.map(lambda x: x[0::2], store)
+            b = jax.tree.map(lambda x: x[1::2], store)
+            store, lens = jax.lax.map(step, (a, b))
+        active = sizes >= 2
+        spilled = spilled + jnp.sum(jnp.where(active, lens, 0), dtype=jnp.int32)
+        steps = steps + jnp.sum(active, dtype=jnp.int32)
+        nlev = nlev + jnp.any(active).astype(jnp.int32)
+    return store, lens, spilled, steps, nlev
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "policy", "memory_rows", "batch_rows", "page_rows", "index_rows",
+        "fanin", "premerge_levels", "backend", "widths", "merge",
+    ),
+)
+def _pipeline_jit(
+    keys,
+    payload,
+    *,
+    policy: str,
+    memory_rows: int,
+    batch_rows: int,
+    page_rows: int,
+    index_rows: int,
+    fanin: int,
+    premerge_levels: int,
+    backend: str,
+    widths,
+    merge: bool,
+):
+    M, B, P = memory_rows, batch_rows, page_rows
+    chunk = M if policy in ("traditional", "inrun_dedup") else B
+    t = _num_batches(keys.shape[0], chunk)
+    n_pad = t * chunk
+    bk, bp = _batch(keys, payload, chunk, t)
+    if policy in ("traditional", "inrun_dedup"):
+        store, lens, table, spilled, nruns, overflow = _rungen_sortwrite(
+            bk, bp, dedup=(policy == "inrun_dedup"), C=_round_up(M, P),
+            backend=backend, widths=widths,
+        )
+    elif policy == "early_agg":
+        store, lens, table, spilled, nruns, overflow = _rungen_early_agg(
+            bk, bp, M=M, R=_slots_for(n_pad, M, 2), C=_round_up(M + B, P),
+            backend=backend, widths=widths,
+        )
+    elif policy == "rs":
+        store, lens, table, spilled, nruns, overflow = _rungen_rs(
+            bk, bp, M=M, B=B, R=_slots_for(n_pad, M, 4),
+            C=_round_up(2 * M + 2 * B, P), backend=backend, widths=widths,
+        )
+    else:
+        raise ValueError(f"unknown run-generation policy {policy!r}")
+
+    zero = jnp.int32(0)
+    rg_stats = DeviceSpillStats(
+        rows_spilled_run_generation=spilled,
+        rows_spilled_merge=zero,
+        runs_generated=nruns,
+        merge_steps=zero,
+        merge_levels=zero,
+        pages_read=zero,
+        rows_emitted=zero,
+        index_overflowed=jnp.bool_(False),
+        max_index_occupancy=zero,
+        run_buffer_overflowed=overflow,
+        merge_dropped_rows=jnp.bool_(False),
+    )
+    if not merge:
+        return store, lens, table, rg_stats
+
+    # §4.3: statically planned pre-wide traditional merge levels keep the
+    # number of runs entering the wide merge small enough for its index to
+    # fit the memory allocation (deep-merge regime, O/M > F).
+    store, lens, spill_m, msteps, mlevels = _device_premerge(
+        store, lens, fanin=fanin, levels=premerge_levels, backend=backend
+    )
+    out, out_cur, pages_read, max_occ, ix_overflow, dropped = (
+        merge_mod.wide_merge_device(
+            store, lens, page_rows=P, index_rows=index_rows,
+            out_capacity=max(n_pad, 1), backend=backend,
+        )
+    )
+    # merge/emission stats are charged only when run generation actually
+    # spilled — the in-memory case's pass through the merge is a formality
+    # the host reference never pays (it returns the table directly).
+    spilled_any = nruns > 0
+    one = jnp.where(spilled_any, 1, 0).astype(jnp.int32)
+    stats = DeviceSpillStats(
+        rows_spilled_run_generation=spilled,
+        rows_spilled_merge=spill_m,  # pre-levels only; the wide merge never spills
+        runs_generated=nruns,
+        merge_steps=msteps + one,
+        merge_levels=mlevels + one,
+        pages_read=jnp.where(spilled_any, pages_read, 0).astype(jnp.int32),
+        rows_emitted=jnp.where(spilled_any, out_cur, 0).astype(jnp.int32),
+        index_overflowed=spilled_any & ix_overflow,
+        max_index_occupancy=jnp.where(spilled_any, max_occ, 0).astype(jnp.int32),
+        run_buffer_overflowed=overflow,
+        merge_dropped_rows=dropped,
+    )
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def _canon_inputs(keys, payload):
+    """Host-side canonicalization that never touches device values: numpy
+    inputs get the reference dtype treatment; jax arrays pass through
+    (so pre-placed device inputs incur zero extra transfers)."""
+    if not isinstance(keys, jax.Array):
+        keys = rg._np_keys(np.asarray(keys))
+    if payload is not None:
+        if not isinstance(payload, jax.Array):
+            payload = np.asarray(payload, dtype=np.float32)
+        if payload.ndim == 1:
+            payload = payload[:, None]
+    return keys, payload
+
+
+def generate_runs_device(
+    keys,
+    payload=None,
+    cfg: ExecConfig | None = None,
+    *,
+    policy: str = "early_agg",
+    backend: str = "auto",
+    widths: tuple[int, int, int] | None = None,
+):
+    """Scan-based run generation, entirely device-resident.
+
+    Returns ``(store_state, lens, table, dstats)`` — a stacked run buffer
+    (leading dims ``(R, C)``), per-slot run lengths, the resident table,
+    and a :class:`DeviceSpillStats` pytree.  Nothing in this call blocks
+    on the device; call ``dstats.finalize()`` (or read ``lens``) for the
+    single host sync.  The host reference with identical semantics is
+    :func:`repro.core.run_generation.generate_runs` (one blocking
+    occupancy readback **per batch**).
+    """
+    cfg = cfg or ExecConfig()
+    backend = dispatch.resolve_backend_name(backend)
+    keys, payload = _canon_inputs(keys, payload)
+    if payload is None:
+        widths = (0, 0, 0) if widths is None else widths
+    with key_dtype_context(np.dtype(keys.dtype)):
+        return _pipeline_jit(
+            as_key_array(keys), payload, policy=policy,
+            memory_rows=cfg.memory_rows, batch_rows=cfg.batch_rows,
+            page_rows=cfg.page_rows, index_rows=cfg.memory_rows,
+            fanin=cfg.fanin, premerge_levels=0,
+            backend=backend, widths=widths, merge=False,
+        )
+
+
+def aggregate_device(
+    keys,
+    payload=None,
+    cfg: ExecConfig | None = None,
+    *,
+    policy: str = "rs",
+    backend: str = "auto",
+    widths: tuple[int, int, int] | None = None,
+    index_rows: int | None = None,
+    output_estimate: int | None = None,
+) -> tuple[AggState, DeviceSpillStats]:
+    """Run generation + pre-merge levels + wide merge as ONE compiled
+    program (§3 + §4).
+
+    Pure device computation: the returned state and stats are device
+    arrays and this function never synchronizes (safe under
+    ``jax.transfer_guard("disallow")`` with device-resident inputs,
+    once compiled).  Output is sorted by key, duplicate-free, EMPTY-
+    padded to the batched input capacity.  ``output_estimate`` drives the
+    §4.3 plan exactly like the host path: it fixes the (static) number of
+    pre-wide merge levels; a wrong estimate shifts work between merge
+    styles but never changes the answer.
+    """
+    cfg = cfg or ExecConfig()
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; expected one of {POLICIES}")
+    backend = dispatch.resolve_backend_name(backend)
+    keys, payload = _canon_inputs(keys, payload)
+    if payload is None:
+        widths = (0, 0, 0) if widths is None else widths
+    if keys.shape[0] == 0:  # static early-out: nothing to scan or merge
+        width = 0 if payload is None else payload.shape[1]
+        kd = np.dtype(keys.dtype)
+        kd = kd if kd == np.uint64 else np.dtype(np.uint32)
+        with key_dtype_context(kd):
+            return (
+                empty_state(0, width, key_dtype=kd, widths=widths),
+                DeviceSpillStats.zeros(),
+            )
+    from repro.core.insort import plan_pre_merge_levels  # lazy: avoids cycle
+
+    # `is None`, not falsy: an explicit 0 estimate must plan like the host
+    est = (cfg.memory_rows * cfg.fanin if output_estimate is None
+           else output_estimate)
+    r_static = _static_run_slots(policy, keys.shape[0], cfg.memory_rows,
+                                 cfg.batch_rows)
+    pre = plan_pre_merge_levels(est, cfg, r_static)
+    with key_dtype_context(np.dtype(keys.dtype)):
+        return _pipeline_jit(
+            as_key_array(keys), payload, policy=policy,
+            memory_rows=cfg.memory_rows, batch_rows=cfg.batch_rows,
+            page_rows=cfg.page_rows, index_rows=index_rows or cfg.memory_rows,
+            fanin=cfg.fanin, premerge_levels=pre,
+            backend=backend, widths=widths, merge=True,
+        )
+
+
+def insort_aggregate_device(
+    keys,
+    payload=None,
+    cfg: ExecConfig | None = None,
+    *,
+    policy: str = "rs",
+    backend: str = "auto",
+    widths: tuple[int, int, int] | None = None,
+    index_rows: int | None = None,
+    output_estimate: int | None = None,
+) -> tuple[AggState, SpillStats]:
+    """:func:`aggregate_device` + the one host readback of spill stats —
+    the device twin of :func:`repro.core.insort.insort_aggregate`."""
+    state, dstats = aggregate_device(
+        keys, payload, cfg, policy=policy, backend=backend, widths=widths,
+        index_rows=index_rows, output_estimate=output_estimate,
+    )
+    return state, dstats.finalize()

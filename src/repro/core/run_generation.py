@@ -12,9 +12,16 @@ spill policies that reproduce the paper's comparison space:
   *unique* keys, so a run is written only once M distinct keys
   accumulated.  If the output fits memory, nothing spills (Fig 6).
 
-The driver is host-orchestrated (like the paper's I/O loop) around jitted
-fixed-shape steps.  Spill accounting is exact, in rows — the unit used in
-the paper's figures.
+The drivers here are host-orchestrated (like the paper's I/O loop) around
+jitted fixed-shape steps, blocking on an occupancy readback after every
+batch: they are the **reference path** — exact, per-batch spill
+accounting in the paper's unit (rows), used by the cost-model study and
+as the oracle-parity baseline.  The production path is
+:mod:`repro.core.pipeline`, which runs the same policies as a single
+jitted ``lax.scan`` with device-resident run buffers and O(1) host syncs
+per input; the step primitives (:func:`rs_split_absorb`,
+:func:`rs_evict_step`) are shared so both paths execute the same
+per-batch state machine.
 """
 from __future__ import annotations
 
@@ -208,17 +215,16 @@ def _mask_state(state: AggState, keep) -> AggState:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
-def _rs_absorb(run_table, next_table, frontier, bkeys, bpay, *, backend="xla"):
-    batch = sorted_ops.absorb(
-        rows_to_state(bkeys, bpay, widths=run_table.widths), backend=backend
-    )
+def rs_split_absorb(run_table, next_table, frontier, batch, *, backend="xla"):
+    """Partition one **sorted, deduped** batch at the eviction frontier and
+    absorb each half into its table (traceable; shared by the host
+    reference loop and the device-resident scan body)."""
     valid = batch.keys != empty_key(batch.keys.dtype)
     # the sorted batch splits at the frontier into a `lo` prefix and a
     # `hi` suffix; masking keeps `lo` sorted as-is, while `hi` must be
     # rolled left past the masked prefix to restore the sorted/EMPTY-
     # padded invariant merge_absorb requires.
-    n_lo = jnp.sum((valid & (batch.keys < frontier)).astype(jnp.int32))
+    n_lo = jnp.sum(valid & (batch.keys < frontier), dtype=jnp.int32)
     hi = _mask_state(batch, valid & (batch.keys >= frontier))
     hi = jax.tree.map(lambda x: jnp.roll(x, -n_lo, axis=0), hi)
     lo = _mask_state(batch, valid & (batch.keys < frontier))
@@ -231,12 +237,23 @@ def _rs_absorb(run_table, next_table, frontier, bkeys, bpay, *, backend="xla"):
         lambda x: x[:cap_n],
         sorted_ops.merge_absorb(next_table, lo, backend=backend, assume_unique=True),
     )
+    return run_table, next_table
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _rs_absorb(run_table, next_table, frontier, bkeys, bpay, *, backend="xla"):
+    batch = sorted_ops.absorb(
+        rows_to_state(bkeys, bpay, widths=run_table.widths), backend=backend
+    )
+    run_table, next_table = rs_split_absorb(
+        run_table, next_table, frontier, batch, backend=backend
+    )
     return run_table, next_table, run_table.occupancy(), next_table.occupancy()
 
 
-@functools.partial(jax.jit, static_argnames=("quantum", "backend"))
-def _rs_evict(run_table, quantum: int, *, backend="xla"):
-    """Advance the eviction scan: pop the lowest `quantum` rows."""
+def rs_evict_step(run_table, quantum: int):
+    """Advance the eviction scan: pop the lowest ``quantum`` rows
+    (traceable; shared by the host loop and the device scan)."""
     cap = run_table.capacity
     evicted = jax.tree.map(lambda x: x[:quantum], run_table)
     src = jnp.minimum(jnp.arange(cap) + quantum, cap - 1)
@@ -246,8 +263,16 @@ def _rs_evict(run_table, quantum: int, *, backend="xla"):
     kd = evicted.keys.dtype
     valid = evicted.keys != empty_key(kd)
     frontier = jnp.max(jnp.where(valid, evicted.keys, jnp.zeros((), kd)))
-    n_evicted = jnp.sum(valid.astype(jnp.int32))
+    # dtype pinned: x64 mode would promote the sum to int64 and break
+    # scan/while carries built around int32 cursors
+    n_evicted = jnp.sum(valid, dtype=jnp.int32)
     return evicted, rest, frontier, n_evicted
+
+
+@functools.partial(jax.jit, static_argnames=("quantum", "backend"))
+def _rs_evict(run_table, quantum: int, *, backend="xla"):
+    del backend  # pure jnp; kept for call-site symmetry
+    return rs_evict_step(run_table, quantum)
 
 
 def generate_runs_rs(

@@ -361,6 +361,7 @@ def aggregate(
     backend: str = "auto",
     cfg: ExecConfig | None = None,
     output_estimate: int | None = None,
+    pipeline: str = "device",
 ) -> AggResult:
     """Duplicate removal / grouping / aggregation behind one front door.
 
@@ -376,6 +377,12 @@ def aggregate(
     ``"insort"``, ``"hash"``, ``"f1_hash"``, ``"sort_then_stream"``, or
     ``"inmemory"``.  ``backend``: ``"auto" | "xla" | "pallas"`` through
     the dispatch registry.
+
+    With the default ``pipeline="device"``, the in-sort algorithms
+    compile to ONE device program — run generation as a ``lax.scan``
+    fused with the wide merge (:mod:`repro.core.pipeline`), with a single
+    host readback for the stats.  ``pipeline="host"`` selects the
+    host-orchestrated reference loop (exact per-merge-level accounting).
     """
     cfg = cfg or ExecConfig()
     if not isinstance(aggs, AggSpec):
@@ -402,11 +409,12 @@ def aggregate(
 
     sort_based = algorithm in ("auto", "insort", "sort_then_stream", "inmemory")
     plan["algorithm"] = "insort" if algorithm == "auto" else algorithm
+    plan["pipeline"] = pipeline if algorithm in ("auto", "insort") else "host"
     with key_dtype_context(by.key_dtype):
         if algorithm in ("auto", "insort"):
             state, stats = insort_mod.insort_aggregate(
                 packed, values, cfg, output_estimate=output_estimate,
-                backend=backend, widths=widths,
+                backend=backend, widths=widths, pipeline=pipeline,
             )
         elif algorithm == "sort_then_stream":
             state, stats = insort_mod.sort_then_stream_aggregate(
@@ -451,6 +459,7 @@ def rollup(
     backend: str = "auto",
     cfg: ExecConfig | None = None,
     output_estimate: int | None = None,
+    pipeline: str = "device",
 ) -> tuple[dict[tuple[str, ...], AggResult], SpillStats]:
     """``GROUP BY ROLLUP(...)`` over any key hierarchy from ONE sort (§2.2).
 
@@ -477,6 +486,7 @@ def rollup(
     fine = aggregate(
         columns, by=by, values=values, aggs=aggs, algorithm=algorithm,
         backend=backend, cfg=cfg, output_estimate=output_estimate,
+        pipeline=pipeline,
         order_by=True,  # the peel below requires key-sorted input (hash
         # algorithms pay their post-sort here, Fig 19 style)
     )

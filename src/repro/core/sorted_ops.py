@@ -102,25 +102,57 @@ def merge_absorb(
         )
 
 
-def merge_absorb_many(
-    states: list[AggState], *, backend: str = "auto", assume_unique: bool = False
-) -> AggState:
-    """Balanced tree of linear merges over already-sorted states (the
-    multi-fragment absorb used by the distributed group-by and the hash
-    splice).  Capacity of the result is the summed input capacity."""
-    assert states, "merge_absorb_many needs at least one state"
+def interleave(a: AggState, b: AggState, *, backend: str = "auto") -> AggState:
+    """Linear merge of two **key-sorted** states WITHOUT combining
+    duplicates: the raw sorted multiset union, capacity ``|a| + |b|``,
+    EMPTY rows ranked to the tail.  Traditional merge levels that defer
+    aggregation (the paper's Fig 2 top baseline) are trees of exactly
+    this operation.  Backends without a fused kernel fall back to the
+    XLA rank-gather interleave."""
+    from repro.core import ordered_index as oi
+
+    with key_dtype_context(a):
+        be = dispatch.get_backend(backend)
+        fn = be.interleave or oi.interleave_sorted
+        return fn(a, b)
+
+
+def _merge_tree(states: list[AggState], pair_fn) -> AggState:
+    """Balanced binary tree reduction over ≥1 states with ``pair_fn``
+    (odd element carried to the next round)."""
+    assert states, "merge tree needs at least one state"
     states = list(states)
     while len(states) > 1:
         nxt = [
-            merge_absorb(
-                states[i], states[i + 1], backend=backend, assume_unique=assume_unique
-            )
+            pair_fn(states[i], states[i + 1])
             for i in range(0, len(states) - 1, 2)
         ]
         if len(states) % 2:
             nxt.append(states[-1])
         states = nxt
     return states[0]
+
+
+def merge_absorb_many(
+    states: list[AggState], *, backend: str = "auto", assume_unique: bool = False
+) -> AggState:
+    """Balanced tree of linear merges over already-sorted states (the
+    multi-fragment absorb used by the distributed group-by, the hash
+    splice, and the traditional merge's aggregating groups).  Capacity of
+    the result is the summed input capacity."""
+    return _merge_tree(
+        list(states),
+        lambda a, b: merge_absorb(a, b, backend=backend, assume_unique=assume_unique),
+    )
+
+
+def interleave_many(states: list[AggState], *, backend: str = "auto") -> AggState:
+    """Balanced tree of non-combining linear merges: the raw sorted
+    multiset union of already-sorted states (traditional merge levels
+    that defer aggregation).  Capacity is the summed input capacity."""
+    return _merge_tree(
+        list(states), lambda a, b: interleave(a, b, backend=backend)
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -281,3 +281,70 @@ class SpillStats:
         d = dataclasses.asdict(self)
         d["total_spill_rows"] = self.total_spill_rows
         return d
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeviceSpillStats:
+    """:class:`SpillStats` as a device pytree of int32/bool scalars.
+
+    The device-resident pipeline (:mod:`repro.core.pipeline`) accumulates
+    spill accounting in scan/while carries instead of host counters, so an
+    entire run-generation + wide-merge program needs **zero** host syncs
+    until the caller asks for numbers.  :meth:`finalize` performs that one
+    readback and returns the plain host :class:`SpillStats`.
+
+    Two device-side safety flags have no host twin — both mean rows were
+    (or would have been) silently lost, so ``finalize`` raises instead of
+    returning corrupt accounting: ``run_buffer_overflowed`` trips if run
+    generation needed more run slots than the preallocated stacked buffer
+    holds; ``merge_dropped_rows`` trips if the wide-merge index exceeded
+    its hard capacity (resident > index_rows + page_rows) and live rows
+    were trimmed.
+    """
+
+    rows_spilled_run_generation: jax.Array
+    rows_spilled_merge: jax.Array
+    runs_generated: jax.Array
+    merge_steps: jax.Array
+    merge_levels: jax.Array
+    pages_read: jax.Array
+    rows_emitted: jax.Array
+    index_overflowed: jax.Array
+    max_index_occupancy: jax.Array
+    run_buffer_overflowed: jax.Array
+    merge_dropped_rows: jax.Array
+
+    @classmethod
+    def zeros(cls) -> "DeviceSpillStats":
+        z = jnp.int32(0)
+        f = jnp.bool_(False)
+        return cls(z, z, z, z, z, z, z, f, z, f, f)
+
+    def finalize(self) -> SpillStats:
+        """One host readback → plain :class:`SpillStats` (the pipeline's
+        only device→host synchronization point)."""
+        if bool(self.run_buffer_overflowed):
+            raise RuntimeError(
+                "device run buffer overflowed its preallocated run slots; "
+                "results would be missing rows (this is a bug in the slot "
+                "bound — please report input sizes and ExecConfig)"
+            )
+        if bool(self.merge_dropped_rows):
+            raise RuntimeError(
+                "wide-merge index overflowed its capacity and dropped rows "
+                f"(max resident {int(self.max_index_occupancy)} rows); the "
+                "merge plan admitted too many runs at once — pass a larger "
+                "output_estimate (more pre-merge levels) or raise index_rows"
+            )
+        return SpillStats(
+            rows_spilled_run_generation=int(self.rows_spilled_run_generation),
+            rows_spilled_merge=int(self.rows_spilled_merge),
+            runs_generated=int(self.runs_generated),
+            merge_steps=int(self.merge_steps),
+            merge_levels=int(self.merge_levels),
+            pages_read=int(self.pages_read),
+            rows_emitted=int(self.rows_emitted),
+            index_overflowed=bool(self.index_overflowed),
+            max_index_occupancy=int(self.max_index_occupancy),
+        )

@@ -106,6 +106,46 @@ def test_merge_absorb_performs_no_sort(backend, assume_unique, key_dtype):
         )(a, b)
     prims = _collect_primitives(jx.jaxpr, set())
     assert "sort" not in prims, f"found sort primitive via backend={backend}: {prims}"
+    if backend == "xla":
+        # the XLA engine is also scatter-free end to end: rank-gather
+        # interleave + segmented-scan combine + compaction gather
+        scatters = {p for p in prims if "scatter" in p}
+        assert not scatters, f"found scatter primitives on xla path: {scatters}"
+
+
+@pytest.mark.parametrize("key_dtype", KEY_DTYPES)
+def test_segmented_combine_xla_scatter_free_and_correct(key_dtype):
+    """The general segmented combine (≥3 duplicates per group) on XLA is a
+    segmented associative scan + compaction gather: its jaxpr must contain
+    neither a sort nor any scatter primitive, and it must match the oracle
+    on groups with ≥3 duplicates."""
+    rng = np.random.default_rng(5)
+    keys = np.sort(
+        np.repeat(rng.choice(200, 60, replace=False), rng.integers(3, 7, 60))
+    ).astype(key_dtype)
+    if key_dtype == np.uint64:
+        keys = keys << np.uint64(34)
+    pay = rng.normal(size=(len(keys), 2)).astype(np.float32)
+    with key_dtype_context(key_dtype):
+        st = rows_to_state(jnp.asarray(keys), jnp.asarray(pay))
+        jx = jax.make_jaxpr(
+            lambda s: sorted_ops.segmented_combine(s, backend="xla")
+        )(st)
+        out = sorted_ops.segmented_combine(st, backend="xla")
+    prims = _collect_primitives(jx.jaxpr, set())
+    scatters = {p for p in prims if "scatter" in p}
+    assert not scatters, f"segmented_combine_xla scatters: {scatters}"
+    assert "sort" not in prims
+    validate_against_oracle(out, keys, pay)
+    # per-group min/max survive the scan rewrite
+    got_valid = np.asarray(out.valid())
+    got_keys = np.asarray(out.keys)[got_valid]
+    for name, red in (("min", np.minimum.reduceat), ("max", np.maximum.reduceat)):
+        col = np.asarray(getattr(out, name))[got_valid]
+        uk, starts = np.unique(keys, return_index=True)
+        want = red(pay, starts, axis=0)
+        np.testing.assert_array_equal(got_keys, uk)
+        np.testing.assert_allclose(col, want, rtol=1e-6)
 
 
 def test_absorb_of_unsorted_does_sort():

@@ -1,0 +1,265 @@
+"""Device-resident pipeline tests: oracle/reference parity for every
+run-generation policy at both key widths, plus the sync-count regression
+tests — the scan-based pipeline performs O(1) host transfers per input
+while the host-loop reference blocks once per batch (O(N/B)).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import pipeline
+from repro.core import run_generation as rg
+from repro.core.insort import insort_aggregate
+from repro.core.operators import validate_against_oracle
+from repro.core.types import DeviceSpillStats, ExecConfig, empty_key
+
+RNG = np.random.default_rng(7)
+
+# one shared config so every parametrization reuses the same compiled
+# programs (the fused jit specializes on (T, M, B, P, policy, dtype))
+CFG = ExecConfig(memory_rows=256, page_rows=32, fanin=4, batch_rows=64)
+N = 4000
+KEY_DTYPES = (np.uint32, np.uint64)
+POLICIES = ("traditional", "inrun_dedup", "early_agg", "rs")
+
+
+def _mkinput(n=N, domain=1200, width=1, key_dtype=np.uint32, rng=RNG):
+    keys = rng.integers(0, domain, n).astype(key_dtype)
+    if key_dtype == np.uint64:
+        keys = keys << np.uint64(30)  # spread past 32 bits
+    pay = None if width == 0 else rng.normal(size=(n, width)).astype(np.float32)
+    return keys, pay
+
+
+def _host_reference(keys, pay, policy):
+    if policy == "rs":
+        return insort_aggregate(keys, pay, CFG, run_policy="rs", pipeline="host")
+    if policy == "early_agg":
+        return insort_aggregate(keys, pay, CFG, run_policy="batch", pipeline="host")
+    # inrun_dedup / traditional: the host generate_runs path with the
+    # matching policy (merged through the host wide merge)
+    return insort_aggregate(
+        keys, pay, CFG, early_aggregation=False, pipeline="host"
+    )
+
+
+# ---------------------------------------------------------------------------
+# oracle + host-reference parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("key_dtype", KEY_DTYPES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_device_pipeline_oracle_parity(policy, key_dtype):
+    keys, pay = _mkinput(key_dtype=key_dtype)
+    st, stats = pipeline.insort_aggregate_device(keys, pay, CFG, policy=policy)
+    validate_against_oracle(st, keys, pay)
+    assert stats.rows_spilled_merge == 0  # the wide merge never spills
+    assert stats.total_spill_rows > 0  # sized to genuinely take the spill path
+    k = np.asarray(st.keys)
+    k = k[k != empty_key(k.dtype)]
+    assert np.all(k[:-1] < k[1:])  # sorted, duplicate-free output
+
+
+@pytest.mark.parametrize("key_dtype", KEY_DTYPES)
+@pytest.mark.parametrize("policy", ("early_agg", "rs"))
+def test_device_pipeline_matches_host_reference_exactly(policy, key_dtype):
+    """Same per-batch state machine ⇒ identical runs, spill accounting,
+    and key/count output as the host loop (random input: the device
+    buffer's close-early rule never triggers)."""
+    keys, pay = _mkinput(key_dtype=key_dtype)
+    st_h, s_h = _host_reference(keys, pay, policy)
+    st_d, s_d = pipeline.insort_aggregate_device(keys, pay, CFG, policy=policy)
+    assert s_d.as_dict() == s_h.as_dict()
+    kh = np.asarray(st_h.keys)
+    kd = np.asarray(st_d.keys)
+    kh = kh[kh != empty_key(kh.dtype)]
+    kd = kd[kd != empty_key(kd.dtype)]
+    np.testing.assert_array_equal(kh, kd)
+    ch = np.asarray(st_h.count)[: len(kh)]
+    cd = np.asarray(st_d.count)[: len(kd)]
+    np.testing.assert_array_equal(ch, cd)
+
+
+@pytest.mark.parametrize("policy", ("traditional", "inrun_dedup"))
+def test_device_sortwrite_matches_host_run_accounting(policy):
+    """Read-sort-write policies: run generation accounting (runs, spilled
+    rows) is identical to the host generate_runs; merge accounting
+    differs by design (the fused path always finishes with one wide
+    merge instead of spilling pre-levels)."""
+    keys, pay = _mkinput()
+    runs, _, s_h = rg.generate_runs(keys, pay, CFG, policy=policy)
+    _, s_d = pipeline.insort_aggregate_device(keys, pay, CFG, policy=policy)
+    assert s_d.runs_generated == s_h.runs_generated == len(runs)
+    assert s_d.rows_spilled_run_generation == s_h.rows_spilled_run_generation
+
+
+def test_device_pipeline_in_memory_and_edges():
+    # in-memory: zero spill accounting, table streamed through the merge
+    keys = RNG.integers(0, 50, 800).astype(np.uint32)
+    st, stats = pipeline.insort_aggregate_device(keys, None, CFG, policy="rs")
+    validate_against_oracle(st, keys)
+    assert stats.as_dict() == pipeline.SpillStats().as_dict()
+    # empty input
+    st, stats = pipeline.insort_aggregate_device(
+        np.zeros((0,), np.uint32), None, CFG
+    )
+    assert int(st.occupancy()) == 0 and stats.total_spill_rows == 0
+    # one hot key: a single group always fits memory
+    hot = np.full(3 * N, 7, np.uint32)
+    st, stats = pipeline.insort_aggregate_device(hot, None, CFG, policy="rs")
+    assert int(st.occupancy()) == 1 and int(st.count[0]) == 3 * N
+    assert stats.total_spill_rows == 0
+
+
+def test_device_rs_adversarial_orders():
+    """Pre-sorted input makes host replacement selection build one giant
+    run; the device buffer legally closes runs early at slot capacity —
+    output must be identical either way.  Reverse-sorted input exercises
+    the close/promote path every eviction."""
+    base = RNG.integers(0, 3000, N).astype(np.uint32)
+    for keys in (np.sort(base), np.sort(base)[::-1].copy()):
+        st, stats = pipeline.insort_aggregate_device(keys, None, CFG, policy="rs")
+        validate_against_oracle(st, keys)
+        assert stats.rows_spilled_merge == 0
+
+
+def test_device_premerge_levels_deep_merge_regime():
+    """O/M ≫ F: the statically planned device pre-merge levels (§4.3)
+    keep the wide-merge index within memory where a single wide merge
+    over all runs would overflow it; merge depth matches the paper's
+    output-driven formula."""
+    from repro.core.cost_model import merge_levels_insort
+
+    keys = RNG.integers(0, 3200, 16_000).astype(np.uint32)
+    o = len(np.unique(keys))  # O/M ≈ 12 ≫ F = 4
+    st, stats = pipeline.insort_aggregate_device(
+        keys, None, CFG, policy="rs", output_estimate=o
+    )
+    validate_against_oracle(st, keys)
+    assert stats.rows_spilled_merge > 0  # pre-levels rewrite runs
+    assert stats.merge_levels == merge_levels_insort(o, CFG.memory_rows, CFG.fanin)
+    assert not stats.index_overflowed
+
+
+def test_device_merge_drop_fails_loudly():
+    """If the wide-merge index would drop live rows (severe estimate
+    error / tiny index), the pipeline raises instead of returning a
+    silently incomplete result."""
+    keys = RNG.permutation(np.arange(4000, dtype=np.uint32))  # all distinct
+    with pytest.raises(RuntimeError, match="dropped rows"):
+        pipeline.insort_aggregate_device(
+            keys, None, CFG, policy="early_agg", index_rows=8
+        )
+
+
+def test_host_wide_merge_drop_fails_loudly():
+    from repro.core import merge as merge_mod
+
+    keys = RNG.permutation(np.arange(4000, dtype=np.uint32))
+    runs, _, stats = rg.generate_runs(keys, None, CFG, policy="early_agg")
+    with pytest.raises(RuntimeError, match="dropped rows"):
+        merge_mod.wide_merge(runs, CFG, stats=stats, index_rows=8)
+
+
+@pytest.mark.parametrize("policy", ("early_agg", "rs"))
+def test_device_pipeline_pallas_backend_smoke(policy):
+    """The fused program also compiles with the Pallas kernel backend
+    (interpret mode off-TPU) — tiny size, it is one big program."""
+    cfg = ExecConfig(memory_rows=64, page_rows=16, fanin=4, batch_rows=16)
+    keys, pay = _mkinput(n=400, domain=120)
+    st, _ = pipeline.insort_aggregate_device(
+        keys, pay, cfg, policy=policy, backend="pallas"
+    )
+    validate_against_oracle(st, keys, pay)
+
+
+def test_device_plane_widths_travel_through_pipeline():
+    """An AggSpec-style width restriction (count+sum only) keeps zero-width
+    min/max planes across run buffers, eviction, and the merge."""
+    keys, pay = _mkinput()
+    st, _ = pipeline.insort_aggregate_device(
+        keys, pay, CFG, policy="rs", widths=(1, 0, 0)
+    )
+    assert st.widths == (1, 0, 0)
+    validate_against_oracle(st, keys, pay)
+
+
+# ---------------------------------------------------------------------------
+# sync-count regression: O(1) device syncs vs O(N/B) host syncs
+# ---------------------------------------------------------------------------
+
+
+def test_device_pipeline_is_sync_free_under_transfer_guard():
+    """The full generate_runs + wide_merge program performs ZERO implicit
+    transfers: with device-resident inputs it runs to completion under
+    ``jax.transfer_guard("disallow")``; only the explicit stats finalize
+    reads anything back (O(1) scalars per input)."""
+    keys, pay = _mkinput()
+    dk, dp = jax.device_put(keys), jax.device_put(pay)
+    # compile outside the guard; the guard then proves steady-state runs
+    state, _ = pipeline.aggregate_device(dk, dp, CFG, policy="rs")
+    jax.block_until_ready(state)
+    with jax.transfer_guard("disallow"):
+        state, dstats = pipeline.aggregate_device(dk, dp, CFG, policy="rs")
+        jax.block_until_ready((state, dstats))
+    assert isinstance(dstats, DeviceSpillStats)
+    stats = dstats.finalize()  # the single readback, outside the guard
+    assert stats.total_spill_rows > 0
+    validate_against_oracle(state, keys, pay)
+
+
+def test_host_loop_syncs_once_per_batch():
+    """The host reference blocks on an occupancy readback after EVERY
+    batch: counting device-scalar ``int(...)`` conversions inside the
+    run-generation module shows O(N/B) syncs, and the loop cannot even
+    start under a transfer guard."""
+    keys, pay = _mkinput()
+    n_batches = -(-len(keys) // CFG.batch_rows)
+    counts = {"sync": 0}
+    real_int = int
+
+    def counting_int(x, *a, **kw):
+        if isinstance(x, jax.Array):
+            counts["sync"] += 1
+        return real_int(x, *a, **kw)
+
+    # module-level name shadows the builtin inside run_generation only
+    rg.int = counting_int
+    try:
+        rg.generate_runs(keys, pay, CFG, policy="early_agg")
+    finally:
+        del rg.int
+    assert counts["sync"] >= n_batches  # one occupancy readback per batch
+
+    with jax.transfer_guard("disallow"):
+        with pytest.raises(Exception):
+            rg.generate_runs(keys, pay, CFG, policy="early_agg")
+
+
+# ---------------------------------------------------------------------------
+# the schema front door compiles end-to-end by default
+# ---------------------------------------------------------------------------
+
+
+def test_schema_aggregate_routes_through_device_pipeline():
+    import repro
+    from repro.core.schema import KeySpec
+
+    keys, pay = _mkinput()
+    res = repro.aggregate(
+        {"k": keys}, by=KeySpec.of(k=12), values=pay, aggs=("count", "sum"),
+        cfg=CFG, order_by=True,
+    )
+    assert res.plan["pipeline"] == "device"
+    validate_against_oracle(res.state, keys, pay)
+    # the reference host plan produces the same relation
+    res_h = repro.aggregate(
+        {"k": keys}, by=KeySpec.of(k=12), values=pay, aggs=("count", "sum"),
+        cfg=CFG, order_by=True, pipeline="host",
+    )
+    rel_d, rel_h = res.relation(), res_h.relation()
+    np.testing.assert_array_equal(rel_d["k"], rel_h["k"])
+    np.testing.assert_array_equal(rel_d["count"], rel_h["count"])
+    np.testing.assert_allclose(rel_d["sum"], rel_h["sum"], rtol=2e-4, atol=2e-3)
