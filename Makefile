@@ -1,15 +1,16 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-absorb bench-keywidth bench-figures
+.PHONY: test bench bench-absorb bench-keywidth bench-shard bench-figures
 
 test:           ## tier-1 suite (property tests skip if hypothesis absent)
 	python -m pytest -x -q
 
-bench:          ## smoke-mode absorb + key-width + pipeline benches (CI sanity)
+bench:          ## smoke-mode absorb + key-width + pipeline + shard benches (CI sanity)
 	python benchmarks/bench_absorb.py --smoke
 	python benchmarks/bench_keywidth.py --smoke
 	python benchmarks/bench_pipeline.py --smoke
+	python benchmarks/bench_shard.py --smoke
 
 bench-absorb:   ## sort-absorb vs merge-absorb microbenchmark
 	python benchmarks/bench_absorb.py
@@ -19,6 +20,9 @@ bench-keywidth: ## uint32 vs uint64 absorb/merge throughput
 
 bench-pipeline: ## host-loop vs device-resident end-to-end aggregate
 	python benchmarks/bench_pipeline.py
+
+bench-shard:    ## mesh-sharded pipeline: per-world wall time + shuffle volume
+	python benchmarks/bench_shard.py
 
 bench-figures:  ## paper-figure benchmark driver
 	python benchmarks/run.py

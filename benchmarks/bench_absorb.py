@@ -17,12 +17,12 @@ Usage:  PYTHONPATH=src python benchmarks/bench_absorb.py [--m 32768]
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import _harness
 from repro.core import sorted_ops
 from repro.core.types import AggState, rows_to_state
 
@@ -41,28 +41,14 @@ def sort_absorb(table: AggState, batch: AggState, *, backend: str = "xla") -> Ag
     return sorted_ops.absorb(cat, backend=backend)
 
 
-def _time(fn, table, batch, iters: int) -> float:
-    out = fn(table, batch)  # compile
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(table, batch)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
-
-
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--m", type=int, default=1 << 15, help="table rows M")
     p.add_argument("--ratios", type=str, default="1,2,4,8,16,32",
                    help="comma-separated M/B ratios to sweep")
     p.add_argument("--width", type=int, default=2, help="payload columns V")
-    p.add_argument("--iters", type=int, default=30)
-    p.add_argument("--backend", type=str, default="xla",
-                   choices=("xla", "pallas", "auto"))
-    p.add_argument("--smoke", action="store_true",
-                   help="tiny sizes / few iters — CI sanity run, not a measurement")
     p.add_argument("--csv", type=str, default=None, help="also write CSV here")
+    _harness.add_common_args(p, iters=30)
     args = p.parse_args()
     if args.smoke:
         args.m, args.iters, args.ratios = 1 << 10, 3, "1,4"
@@ -92,8 +78,8 @@ def main() -> int:
         b = max(1, m // ratio)
         table = _sorted_state(rng, m, args.width, domain=1 << 28)
         batch = _sorted_state(rng, b, args.width, domain=1 << 28)
-        t_sort = _time(sort_jit, table, batch, args.iters)
-        t_merge = _time(merge_jit, table, batch, args.iters)
+        t_sort = _harness.time_fn(sort_jit, table, batch, iters=args.iters)
+        t_merge = _harness.time_fn(merge_jit, table, batch, iters=args.iters)
         speedup = t_sort / t_merge
         rows.append((m, b, ratio, t_sort, t_merge, speedup))
         if ratio >= 4 and speedup <= 1.0:
@@ -101,17 +87,13 @@ def main() -> int:
         print(f"{m:>8} {b:>8} {ratio:>5} {t_sort * 1e3:>11.3f}ms "
               f"{t_merge * 1e3:>11.3f}ms {speedup:>7.2f}x")
 
-    if args.csv:
-        with open(args.csv, "w") as f:
-            f.write("m,b,ratio,sort_absorb_s,merge_absorb_s,speedup\n")
-            for r in rows:
-                f.write(",".join(str(x) for x in r) + "\n")
+    _harness.write_csv(
+        args.csv,
+        ["m", "b", "ratio", "sort_absorb_s", "merge_absorb_s", "speedup"],
+        rows,
+    )
 
-    from repro.core import dispatch
-
-    if be == "pallas" and dispatch.should_interpret():
-        print("note: pallas ran in interpret mode (no TPU) — timings are "
-              "emulator overhead, not kernel performance")
+    if _harness.interpret_note(be):
         return 0
     if args.smoke:  # sanity run: sizes too small for a meaningful race
         print("smoke OK (perf win-check skipped at smoke sizes)")

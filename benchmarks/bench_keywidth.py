@@ -19,12 +19,11 @@ Usage:  PYTHONPATH=src python benchmarks/bench_keywidth.py [--m 32768]
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+import _harness
 from repro.core import sorted_ops
 from repro.core.types import AggState, key_dtype_context, rows_to_state
 
@@ -43,27 +42,13 @@ def _sorted_state(rng, rows: int, width: int, dtype) -> AggState:
     return sorted_ops.absorb(rows_to_state(_keys(rng, rows, dtype), pay))
 
 
-def _time(fn, *args, iters: int) -> float:
-    out = fn(*args)  # compile
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
-
-
 def main() -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--m", type=int, default=1 << 15, help="table rows M")
     p.add_argument("--ratio", type=int, default=8, help="table/batch ratio M/B")
     p.add_argument("--width", type=int, default=2, help="payload columns V")
-    p.add_argument("--iters", type=int, default=20)
-    p.add_argument("--backend", type=str, default="xla",
-                   choices=("xla", "pallas", "auto"))
-    p.add_argument("--smoke", action="store_true",
-                   help="tiny sizes / few iters — CI sanity run, not a measurement")
     p.add_argument("--csv", type=str, default=None, help="also write CSV here")
+    _harness.add_common_args(p, iters=20)
     args = p.parse_args()
     if args.smoke:
         args.m, args.iters = 1 << 10, 3
@@ -94,8 +79,8 @@ def main() -> int:
             absorb_jit = jax.jit(lambda s: sorted_ops.absorb(s, backend=be))
             merge_jit = jax.jit(lambda t, x: sorted_ops.merge_absorb(
                 t, x, backend=be, assume_unique=True))
-            t_absorb = _time(absorb_jit, raw, iters=args.iters)
-            t_merge = _time(merge_jit, table, batch, iters=args.iters)
+            t_absorb = _harness.time_fn(absorb_jit, raw, iters=args.iters)
+            t_merge = _harness.time_fn(merge_jit, table, batch, iters=args.iters)
         per_dtype[name] = {"absorb": t_absorb, "merge": t_merge}
         for op, t, n in (("absorb", t_absorb, m), ("merge", t_merge, m + b)):
             print(f"{name:>7} {op:>7} {n:>9} {t * 1e3:>9.3f}ms {n / t / 1e6:>9.2f}")
@@ -105,17 +90,8 @@ def main() -> int:
     r_m = per_dtype["uint64"]["merge"] / per_dtype["uint32"]["merge"]
     print(f"\nu64/u32 cost ratio: absorb {r_a:.2f}x, merge {r_m:.2f}x")
 
-    if args.csv:
-        with open(args.csv, "w") as f:
-            f.write("dtype,op,rows,seconds\n")
-            for r in rows_out:
-                f.write(",".join(str(x) for x in r) + "\n")
-
-    from repro.core import dispatch
-
-    if be == "pallas" and dispatch.should_interpret():
-        print("note: pallas ran in interpret mode (no TPU) — timings are "
-              "emulator overhead, not kernel performance")
+    _harness.write_csv(args.csv, ["dtype", "op", "rows", "seconds"], rows_out)
+    _harness.interpret_note(be)
     return 0
 
 

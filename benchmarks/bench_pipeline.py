@@ -21,28 +21,15 @@ Usage:  PYTHONPATH=src python benchmarks/bench_pipeline.py
 from __future__ import annotations
 
 import argparse
-import json
-import pathlib
-import time
 
-import jax
 import numpy as np
 
+import _harness
 from repro.core import pipeline
 from repro.core.insort import insort_aggregate
 from repro.core.types import ExecConfig
 
 _RUN_POLICY = {"early_agg": "batch", "rs": "rs"}  # host-loop spelling
-
-
-def _time(fn, iters: int) -> float:
-    out = fn()  # warmup: compile + caches
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn()
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
 
 
 def main() -> int:
@@ -53,16 +40,11 @@ def main() -> int:
     p.add_argument("--dups", type=str, default="1,16",
                    help="duplicate factors (mean rows per key)")
     p.add_argument("--policies", type=str, default="early_agg,rs")
-    p.add_argument("--iters", type=int, default=3)
     p.add_argument("--width", type=int, default=1, help="payload columns V")
-    p.add_argument("--backend", type=str, default="xla",
-                   choices=("xla", "pallas", "auto"))
-    p.add_argument("--smoke", action="store_true",
-                   help="tiny sizes / few iters — CI sanity run, not a "
-                        "measurement; writes no JSON unless --out is given")
     p.add_argument("--out", type=str, default=None,
                    help="JSON output path (default: repo-root "
                         "BENCH_pipeline.json; suppressed under --smoke)")
+    _harness.add_common_args(p, iters=3)
     args = p.parse_args()
     if args.smoke:
         args.m, args.iters = 1 << 8, 1
@@ -101,8 +83,12 @@ def main() -> int:
                     )
                     return st.keys
 
-                t_host = _time(host, args.iters)
-                t_dev = _time(device, args.iters)
+                # block_each: the host loop's per-batch readbacks ARE the
+                # measured quantity — per-call end-to-end latency
+                t_host = _harness.time_fn(host, iters=args.iters,
+                                          block_each=True)
+                t_dev = _harness.time_fn(device, iters=args.iters,
+                                         block_each=True)
                 row = {
                     "policy": policy, "n": n, "m": M, "b": B,
                     "n_over_m": ratio, "n_over_b": n // B, "dup": dup,
@@ -118,20 +104,13 @@ def main() -> int:
     report = {
         "bench": "pipeline_host_vs_device",
         "backend": args.backend,
-        "jax_device": jax.default_backend(),
         "config": {"memory_rows": M, "batch_rows": B,
                    "page_rows": cfg.page_rows, "iters": args.iters,
                    "payload_width": args.width},
         "results": results,
     }
-    out = args.out
-    if out is None and not args.smoke:
-        out = str(pathlib.Path(__file__).resolve().parent.parent
-                  / "BENCH_pipeline.json")
-    if out:
-        with open(out, "w") as f:
-            json.dump(report, f, indent=2)
-        print(f"wrote {out}")
+    _harness.write_json_report(report, out=args.out, smoke=args.smoke,
+                               default_name="BENCH_pipeline.json")
     wins = [r for r in results if r["n_over_b"] >= 16]
     if wins and all(r["speedup"] > 1.0 for r in wins):
         print("device pipeline wins at every N/B >= 16")

@@ -1,0 +1,153 @@
+"""Mesh-sharded pipeline benchmark: per-world wall time and shuffle volume.
+
+Runs the fused external-aggregation program (run generation → §4.3
+pre-merge → wide merge → key-range all_to_all → per-owner merge) over
+meshes of increasing world size and reports, per world:
+
+* wall-clock per aggregate (the whole mesh runs ONE compiled program);
+* **rows_shuffled vs rows_input** — valid rows that crossed the
+  all_to_all.  Each shard aggregates its slice *before* the exchange
+  (the paper's "aggregate early and locally"), so on duplicate-heavy
+  workloads the wire carries only unique-per-shard rows: the shuffle
+  reduction the distributed-aggregation studies in PAPERS.md measure.
+
+Off-TPU this forces fake host devices (the test-suite trick), so wall
+times are thread-level parallelism at best — the shuffle accounting is
+the portable signal.  Writes ``BENCH_shard.json`` unless ``--smoke``.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_shard.py
+            [--n 262144] [--m 4096] [--dup 16] [--worlds 1,2,8]
+            [--policy rs] [--iters 3] [--backend xla] [--out FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--n", type=int, default=1 << 18, help="total input rows")
+    p.add_argument("--m", type=int, default=1 << 12, help="memory rows M")
+    p.add_argument("--dup", type=int, default=16,
+                   help="duplicate factor (mean rows per key)")
+    p.add_argument("--worlds", type=str, default="1,2,8",
+                   help="comma-separated mesh sizes to sweep")
+    p.add_argument("--policy", type=str, default="rs")
+    p.add_argument("--width", type=int, default=1, help="payload columns V")
+    p.add_argument("--out", type=str, default=None,
+                   help="JSON output path (default: repo-root "
+                        "BENCH_shard.json; suppressed under --smoke)")
+    # can't use _harness.add_common_args before the env setup below —
+    # importing the harness imports jax; keep the same flags by hand
+    p.add_argument("--iters", type=int, default=3)
+    p.add_argument("--backend", type=str, default="xla",
+                   choices=("xla", "pallas", "auto"))
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sizes / few iters — CI sanity run, not a "
+                        "measurement; writes no JSON unless --out is given")
+    args = p.parse_args()
+    if args.smoke:
+        args.n, args.m, args.iters, args.worlds = 1 << 12, 1 << 8, 1, "1,2"
+    worlds = [int(w) for w in args.worlds.split(",")]
+
+    # Fake host devices MUST be configured before jax initializes — hence
+    # no module-level jax/_harness import in this one benchmark.  A
+    # pre-existing smaller device-count flag is raised to what the sweep
+    # needs (larger counts are kept).
+    import re
+
+    need = max(worlds)
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+    if m is None:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={need}".strip()
+        )
+    elif int(m.group(1)) < need:
+        os.environ["XLA_FLAGS"] = flags.replace(
+            m.group(0), f"--xla_force_host_platform_device_count={need}"
+        )
+
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    import _harness
+    from repro.core import pipeline
+    from repro.core.types import ExecConfig
+
+    if len(jax.devices()) < need:
+        # unreachable unless jax was initialized before main(); a skip,
+        # not a failure — CI selectors run under `set -e`
+        print(f"SKIP: need {need} devices, have {len(jax.devices())} "
+              "(jax initialized before the device-count flag was set)")
+        return 0
+
+    n, M = args.n, args.m
+    cfg = ExecConfig(memory_rows=M, page_rows=max(16, M // 16), fanin=4,
+                     batch_rows=max(16, M // 8))
+    rng = np.random.default_rng(0)
+    domain = max(1, n // args.dup)
+    keys = rng.integers(0, domain, n).astype(np.uint32)
+    pay = (rng.normal(size=(n, args.width)).astype(np.float32)
+           if args.width else None)
+    est = len(np.unique(keys))
+
+    header = (f"{'world':>6} {'per-call':>11} {'rows_in':>9} "
+              f"{'rows_shuffled':>14} {'shuffle/in':>11} {'spill':>9}")
+    print(f"backend={args.backend}  policy={args.policy}  N={n}  M={M}  "
+          f"dup={args.dup}  iters={args.iters}{'  [smoke]' if args.smoke else ''}")
+    print(header)
+    print("-" * len(header))
+
+    results = []
+    for world in worlds:
+        mesh = jax.make_mesh((world,), ("shard",))
+        dk = jax.device_put(keys, NamedSharding(mesh, P("shard")))
+        dp = (None if pay is None else
+              jax.device_put(pay, NamedSharding(mesh, P("shard", None))))
+
+        def run():
+            st, dstats = pipeline.aggregate_device(
+                dk, dp, cfg, policy=args.policy, backend=args.backend,
+                output_estimate=est, mesh=mesh,
+            )
+            return st.keys, dstats
+
+        t = _harness.time_fn(run, iters=args.iters, block_each=True)
+        _, dstats = run()
+        stats = dstats.finalize()
+        ratio = stats.rows_exchanged / n
+        results.append({
+            "world": world, "seconds": t, "rows_input": n,
+            "rows_shuffled": stats.rows_exchanged, "shuffle_ratio": ratio,
+            "total_spill_rows": stats.total_spill_rows,
+            "runs_generated": stats.runs_generated,
+        })
+        print(f"{world:>6} {t * 1e3:>9.1f}ms {n:>9} "
+              f"{stats.rows_exchanged:>14} {ratio:>10.3f} "
+              f"{stats.total_spill_rows:>9}")
+
+    report = {
+        "bench": "shard_scaling",
+        "backend": args.backend,
+        "config": {"n": n, "memory_rows": M, "dup": args.dup,
+                   "policy": args.policy, "iters": args.iters,
+                   "payload_width": args.width,
+                   "note": "fake host devices off-TPU: wall time is "
+                           "thread-level parallelism; shuffle accounting "
+                           "is the portable signal"},
+        "results": results,
+    }
+    _harness.write_json_report(report, out=args.out, smoke=args.smoke,
+                               default_name="BENCH_shard.json")
+    if args.dup > 1 and all(r["rows_shuffled"] < r["rows_input"]
+                            for r in results):
+        print("local early aggregation kept shuffle volume below input "
+              "rows at every world size")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

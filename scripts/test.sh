@@ -5,6 +5,10 @@
 #   scripts/test.sh --pipeline    fast selector: device-pipeline parity +
 #                                 transfer-guard tests, then the smoke-mode
 #                                 benches (so benchmark code cannot rot)
+#   scripts/test.sh --shard       mesh-sharded selector: sharded parity /
+#                                 edge / transfer-guard tests (forced fake
+#                                 host devices in subprocesses) plus the
+#                                 shard benchmark in smoke mode
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -13,6 +17,16 @@ if [[ "${1:-}" == "--pipeline" ]]; then
   shift
   python -m pytest -x -q tests/test_pipeline.py "$@"
   make bench
+  exit 0
+fi
+
+if [[ "${1:-}" == "--shard" ]]; then
+  shift
+  python -m pytest -x -q tests/test_shard.py \
+    tests/test_distributed.py::test_distributed_groupby_matches_oracle \
+    tests/test_distributed.py::test_distributed_groupby_overflow_fails_loudly \
+    "$@"
+  python benchmarks/bench_shard.py --smoke
   exit 0
 fi
 

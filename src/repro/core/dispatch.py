@@ -55,6 +55,12 @@ class Backend:
         duplicates — the raw sorted multiset union (traditional merge
         levels that defer aggregation need exactly this).  ``None``
         means the engine falls back to the XLA rank-gather interleave.
+    ``shardable``
+        Whether the backend's primitives may be traced inside a
+        ``shard_map`` manual-collective region (the mesh-sharded
+        pipeline runs the whole engine per shard).  Capability flag, not
+        a promise of speed — interpret-mode Pallas is shardable but
+        slow off-TPU.
     """
 
     name: str
@@ -62,6 +68,7 @@ class Backend:
     segmented_combine: Callable
     merge_sorted: Callable
     interleave: Callable | None = None
+    shardable: bool = True
 
 
 _loaders: dict[str, Callable[[], Backend]] = {}
@@ -124,6 +131,17 @@ def get_backend(name: str = "xla") -> Backend:
 def resolve_backend_name(name: str) -> str:
     """Normalize ``"auto"`` to a concrete backend name (for static args)."""
     return get_backend(name).name
+
+
+def check_shardable(name: str) -> None:
+    """Raise :class:`BackendUnavailable` if ``name`` cannot run inside a
+    ``shard_map`` region (mesh-sharded pipeline front door guard)."""
+    be = get_backend(name)
+    if not be.shardable:
+        raise BackendUnavailable(
+            f"backend {be.name!r} does not support shard_map execution; "
+            "use backend='xla' (or 'auto') for mesh-sharded aggregation"
+        )
 
 
 def should_interpret() -> bool:

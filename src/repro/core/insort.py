@@ -57,6 +57,8 @@ def insort_aggregate(
     backend: str = "auto",
     widths: tuple[int, int, int] | None = None,
     pipeline: str = "host",
+    mesh=None,
+    mesh_axis: str | None = None,
 ) -> tuple[AggState, SpillStats]:
     """Group/aggregate an unsorted stream under a memory budget of M rows.
 
@@ -75,11 +77,20 @@ def insort_aggregate(
     from ``output_estimate`` and run on device too).  Plans the fused
     program cannot express (``use_wide_merge=False``) always run on the
     host loop.
+
+    ``mesh`` shards the device pipeline over a mesh axis (one program,
+    per-shard run generation + key-range exchange); it requires
+    ``pipeline="device"`` with the wide merge enabled.
     """
     cfg = cfg or ExecConfig()
     backend = dispatch.resolve_backend_name(backend)  # "auto" → concrete
     if pipeline not in ("host", "device"):
         raise ValueError(f"unknown pipeline {pipeline!r}; expected host|device")
+    if mesh is not None and not (pipeline == "device" and use_wide_merge):
+        raise ValueError(
+            "mesh-sharded aggregation requires pipeline='device' with the "
+            "wide merge enabled (the host loop is single-device)"
+        )
     if pipeline == "device" and use_wide_merge:
         from repro.core import pipeline as pipeline_mod
 
@@ -89,7 +100,7 @@ def insort_aggregate(
             policy = "inrun_dedup"
         return pipeline_mod.insort_aggregate_device(
             keys, payload, cfg, policy=policy, backend=backend, widths=widths,
-            output_estimate=output_estimate,
+            output_estimate=output_estimate, mesh=mesh, mesh_axis=mesh_axis,
         )
     keys = rg._np_keys(keys)
     with key_dtype_context(keys):

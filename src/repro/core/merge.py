@@ -187,6 +187,17 @@ def final_merge_traditional(
     return out
 
 
+def trim_to_capacity(state: AggState, capacity: int):
+    """Trim a compacted (sorted, EMPTY-padded) state to ``capacity`` rows,
+    returning ``(trimmed, dropped)`` where ``dropped`` flags that the cut
+    removed LIVE rows — data loss, never acceptable silently.  Traceable;
+    the flag is a device scalar so callers inside ``jit``/``shard_map``
+    reduce and surface it exactly like the wide merge's
+    ``merge_dropped_rows`` (raise at the one host readback)."""
+    dropped = state.occupancy() > capacity
+    return jax.tree.map(lambda x: x[:capacity], state), dropped
+
+
 # ---------------------------------------------------------------------------
 # wide merge (§4)
 # ---------------------------------------------------------------------------

@@ -71,6 +71,8 @@ def group_by(
     backend: str = "auto",
     widths: tuple[int, int, int] | None = None,
     pipeline: str = "device",
+    mesh=None,
+    mesh_axis: str | None = None,
 ) -> tuple[AggState, SpillStats]:
     """Duplicate removal / grouping / aggregation of an unsorted input.
 
@@ -83,13 +85,22 @@ def group_by(
     The in-sort algorithm runs on the device-resident fused pipeline by
     default (``pipeline="device"``: one compiled program, O(1) host
     syncs); ``pipeline="host"`` selects the reference loop with the
-    paper's exact per-merge-level accounting.
+    paper's exact per-merge-level accounting.  ``mesh`` (a
+    :class:`jax.sharding.Mesh`) shards the device pipeline over
+    ``mesh_axis`` — per-shard run generation, a key-range ``all_to_all``
+    of the locally aggregated outputs, and a per-owner merge; output is
+    globally sorted by (range owner, key).  In-sort only.
     """
     cfg = cfg or ExecConfig()
     if algorithm in ("auto", "insort"):
         return insort_mod.insort_aggregate(
             keys, payload, cfg, output_estimate=output_estimate, backend=backend,
-            widths=widths, pipeline=pipeline,
+            widths=widths, pipeline=pipeline, mesh=mesh, mesh_axis=mesh_axis,
+        )
+    if mesh is not None:
+        raise ValueError(
+            f"mesh-sharded aggregation is in-sort only; algorithm "
+            f"{algorithm!r} cannot shard (use algorithm='insort')"
         )
     if algorithm == "hash":
         return hash_mod.hash_aggregate(

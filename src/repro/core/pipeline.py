@@ -46,6 +46,7 @@ slot bound rather than the dynamic run count).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -84,18 +85,27 @@ def _num_batches(n: int, chunk: int) -> int:
     return 1 << (t - 1).bit_length() if t > 1 else t
 
 
-def _batch(keys, payload, chunk: int, t: int):
-    """(traced) EMPTY/zero-pad the flat input to ``t * chunk`` rows and
-    reshape into scan batches — device-side, no host transfer."""
-    n = keys.shape[0]
-    padn = t * chunk - n
+def _pad_flat(keys, payload, total: int):
+    """(traced) EMPTY/zero-pad flat (keys, payload) to ``total`` rows —
+    EMPTY rows are no-ops in every policy; device-side, no host
+    transfer."""
+    padn = total - keys.shape[0]
     kd = keys.dtype
     keys = jnp.concatenate([keys, jnp.full((padn,), empty_key(kd), kd)])
+    if payload is not None:
+        pad = jnp.zeros((padn,) + payload.shape[1:], payload.dtype)
+        payload = jnp.concatenate([payload, pad])
+    return keys, payload
+
+
+def _batch(keys, payload, chunk: int, t: int):
+    """(traced) pad the flat input to ``t * chunk`` rows and reshape into
+    scan batches."""
+    keys, payload = _pad_flat(keys, payload, t * chunk)
     bk = keys.reshape(t, chunk)
     bp = None
     if payload is not None:
-        pad = jnp.zeros((padn,) + payload.shape[1:], payload.dtype)
-        bp = jnp.concatenate([payload, pad]).reshape(t, chunk, payload.shape[1])
+        bp = payload.reshape(t, chunk, payload.shape[1])
     return bk, bp
 
 
@@ -375,14 +385,7 @@ def _device_premerge(store: AggState, lens, *, fanin: int, levels: int, backend:
     return store, lens, spilled, steps, nlev
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "policy", "memory_rows", "batch_rows", "page_rows", "index_rows",
-        "fanin", "premerge_levels", "backend", "widths", "merge",
-    ),
-)
-def _pipeline_jit(
+def _pipeline_body(
     keys,
     payload,
     *,
@@ -397,6 +400,10 @@ def _pipeline_jit(
     widths,
     merge: bool,
 ):
+    """Traceable single-device pipeline: run generation scan → §4.3
+    pre-merge levels → wide merge.  Jitted directly as
+    :func:`_pipeline_jit`; the mesh-sharded program traces it once per
+    shard inside ``shard_map`` (:func:`_sharded_fn`)."""
     M, B, P = memory_rows, batch_rows, page_rows
     chunk = M if policy in ("traditional", "inrun_dedup") else B
     t = _num_batches(keys.shape[0], chunk)
@@ -433,6 +440,7 @@ def _pipeline_jit(
         max_index_occupancy=zero,
         run_buffer_overflowed=overflow,
         merge_dropped_rows=jnp.bool_(False),
+        rows_exchanged=zero,
     )
     if not merge:
         return store, lens, table, rg_stats
@@ -466,8 +474,126 @@ def _pipeline_jit(
         max_index_occupancy=jnp.where(spilled_any, max_occ, 0).astype(jnp.int32),
         run_buffer_overflowed=overflow,
         merge_dropped_rows=dropped,
+        rows_exchanged=zero,
     )
     return out, stats
+
+
+_pipeline_jit = functools.partial(
+    jax.jit,
+    static_argnames=(
+        "policy", "memory_rows", "batch_rows", "page_rows", "index_rows",
+        "fanin", "premerge_levels", "backend", "widths", "merge",
+    ),
+)(_pipeline_body)
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded pipeline: per-shard run generation + key-range exchange
+# ---------------------------------------------------------------------------
+
+
+def resolve_mesh_axis(mesh, mesh_axis: str | None) -> str:
+    """The mesh axis the pipeline shards over (default: the first)."""
+    if mesh_axis is None:
+        return mesh.axis_names[0]
+    if mesh_axis not in mesh.axis_names:
+        raise ValueError(
+            f"mesh has no axis {mesh_axis!r}; axes: {mesh.axis_names}"
+        )
+    return mesh_axis
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fn(
+    mesh,
+    axis: str,
+    *,
+    policy: str,
+    memory_rows: int,
+    batch_rows: int,
+    page_rows: int,
+    index_rows: int,
+    fanin: int,
+    premerge_levels: int,
+    backend: str,
+    widths,
+):
+    """ONE compiled program for the whole mesh (§2.1: partitioning and
+    sorting are the same physical property):
+
+    1. each shard runs the full single-device pipeline
+       (:func:`_pipeline_body`: run-generation scan into its own run
+       buffer, statically planned §4.3 pre-merge levels, local wide
+       merge) over its slice of the input — local early aggregation
+       before any wire traffic;
+    2. the shards exchange their sorted, duplicate-free outputs by
+       sampled key range (:func:`~repro.distributed.groupby.
+       exchange_sorted_fragments` — the same searchsorted cuts +
+       ``all_to_all`` as the distributed group-by), so only unique rows
+       travel;
+    3. each range owner tree-merges the ``world`` sorted fragments it
+       received — output globally sorted by (owner, key), EMPTY-padded
+       per shard.
+
+    The per-peer quota equals each shard's full output capacity, so the
+    exchange can never cut live rows; ``send_dropped`` is still folded
+    into ``merge_dropped_rows`` defensively.  Stats are reduced across
+    shards on device (:meth:`DeviceSpillStats.cross_shard`), so
+    ``finalize()`` remains the program's single host readback and the
+    loud-failure invariants hold per shard and globally.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import groupby as gb_mod
+    from repro.distributed._compat import shard_map
+
+    world = mesh.shape[axis]
+
+    def body(keys, payload):
+        out, dstats = _pipeline_body(
+            keys, payload, policy=policy, memory_rows=memory_rows,
+            batch_rows=batch_rows, page_rows=page_rows,
+            index_rows=index_rows, fanin=fanin,
+            premerge_levels=premerge_levels, backend=backend,
+            widths=widths, merge=True,
+        )
+        quota = out.capacity  # a peer can at most send its whole output
+        recv, sent, send_dropped = gb_mod.exchange_sorted_fragments(
+            out, axis, world, quota=quota
+        )
+        merged = gb_mod.merge_received_fragments(
+            recv, world, quota, backend=backend
+        )
+        dstats = dataclasses.replace(
+            dstats,
+            merge_dropped_rows=dstats.merge_dropped_rows | send_dropped,
+            rows_exchanged=sent,
+        )
+        return merged, dstats.cross_shard(axis)
+
+    state_specs = AggState(
+        keys=P(axis), count=P(axis), sum=P(axis, None),
+        min=P(axis, None), max=P(axis, None),
+    )
+    n_stats = len(dataclasses.fields(DeviceSpillStats))
+    # check=False: 0.4.x shard_map has no replication rule for while_loop
+    # (the wide merge's page loop); the stats out_specs are P() and truly
+    # replicated anyway (psum/pmax above).
+    inner = shard_map(
+        body, mesh=mesh, in_specs=(P(axis), P(axis, None)),
+        out_specs=(state_specs, DeviceSpillStats(*(P(),) * n_stats)),
+        check=False,
+    )
+
+    def run(keys, payload):
+        # pad so every shard sees the same static n_loc, then hand each
+        # shard its contiguous slice
+        n_loc = -(-keys.shape[0] // world)
+        keys, payload = _pad_flat(keys, payload, world * n_loc)
+        return inner(keys, payload)
+
+    return jax.jit(run)
 
 
 # ---------------------------------------------------------------------------
@@ -533,6 +659,8 @@ def aggregate_device(
     widths: tuple[int, int, int] | None = None,
     index_rows: int | None = None,
     output_estimate: int | None = None,
+    mesh=None,
+    mesh_axis: str | None = None,
 ) -> tuple[AggState, DeviceSpillStats]:
     """Run generation + pre-merge levels + wide merge as ONE compiled
     program (§3 + §4).
@@ -545,6 +673,16 @@ def aggregate_device(
     §4.3 plan exactly like the host path: it fixes the (static) number of
     pre-wide merge levels; a wrong estimate shifts work between merge
     styles but never changes the answer.
+
+    ``mesh`` (a :class:`jax.sharding.Mesh`) shards the whole pipeline
+    over ``mesh_axis`` (default: the mesh's first axis): every device
+    runs run generation + pre-merge + wide merge over its slice of the
+    input, then a sampled key-range ``all_to_all`` exchanges the sorted,
+    duplicate-free per-shard outputs and each range owner merges its
+    fragments — output globally sorted by (owner, key), each shard's
+    slice EMPTY-padded.  Stats are psum/pmax-reduced across shards on
+    device, so this still performs zero host syncs.  ``mesh=None`` is
+    bit-for-bit today's single-device program.
     """
     cfg = cfg or ExecConfig()
     if policy not in POLICIES:
@@ -567,17 +705,38 @@ def aggregate_device(
     # `is None`, not falsy: an explicit 0 estimate must plan like the host
     est = (cfg.memory_rows * cfg.fanin if output_estimate is None
            else output_estimate)
-    r_static = _static_run_slots(policy, keys.shape[0], cfg.memory_rows,
+    if mesh is None:
+        r_static = _static_run_slots(policy, keys.shape[0], cfg.memory_rows,
+                                     cfg.batch_rows)
+        pre = plan_pre_merge_levels(est, cfg, r_static)
+        with key_dtype_context(np.dtype(keys.dtype)):
+            return _pipeline_jit(
+                as_key_array(keys), payload, policy=policy,
+                memory_rows=cfg.memory_rows, batch_rows=cfg.batch_rows,
+                page_rows=cfg.page_rows, index_rows=index_rows or cfg.memory_rows,
+                fanin=cfg.fanin, premerge_levels=pre,
+                backend=backend, widths=widths, merge=True,
+            )
+    dispatch.check_shardable(backend)
+    axis = resolve_mesh_axis(mesh, mesh_axis)
+    world = int(mesh.shape[axis])
+    # the §4.3 plan is per shard: levels from the shard's static run-slot
+    # bound (each shard generates runs over ~N/world rows)
+    n_loc = -(-keys.shape[0] // world)
+    r_static = _static_run_slots(policy, n_loc, cfg.memory_rows,
                                  cfg.batch_rows)
     pre = plan_pre_merge_levels(est, cfg, r_static)
+    if payload is None:  # fixed (n, 0) payload: one in_spec tree
+        payload = np.zeros((keys.shape[0], 0), np.float32)
+    fn = _sharded_fn(
+        mesh, axis, policy=policy,
+        memory_rows=cfg.memory_rows, batch_rows=cfg.batch_rows,
+        page_rows=cfg.page_rows, index_rows=index_rows or cfg.memory_rows,
+        fanin=cfg.fanin, premerge_levels=pre,
+        backend=backend, widths=widths,
+    )
     with key_dtype_context(np.dtype(keys.dtype)):
-        return _pipeline_jit(
-            as_key_array(keys), payload, policy=policy,
-            memory_rows=cfg.memory_rows, batch_rows=cfg.batch_rows,
-            page_rows=cfg.page_rows, index_rows=index_rows or cfg.memory_rows,
-            fanin=cfg.fanin, premerge_levels=pre,
-            backend=backend, widths=widths, merge=True,
-        )
+        return fn(as_key_array(keys), payload)
 
 
 def insort_aggregate_device(
@@ -590,11 +749,14 @@ def insort_aggregate_device(
     widths: tuple[int, int, int] | None = None,
     index_rows: int | None = None,
     output_estimate: int | None = None,
+    mesh=None,
+    mesh_axis: str | None = None,
 ) -> tuple[AggState, SpillStats]:
     """:func:`aggregate_device` + the one host readback of spill stats —
     the device twin of :func:`repro.core.insort.insort_aggregate`."""
     state, dstats = aggregate_device(
         keys, payload, cfg, policy=policy, backend=backend, widths=widths,
         index_rows=index_rows, output_estimate=output_estimate,
+        mesh=mesh, mesh_axis=mesh_axis,
     )
     return state, dstats.finalize()

@@ -362,6 +362,8 @@ def aggregate(
     cfg: ExecConfig | None = None,
     output_estimate: int | None = None,
     pipeline: str = "device",
+    mesh=None,
+    mesh_axis: str | None = None,
 ) -> AggResult:
     """Duplicate removal / grouping / aggregation behind one front door.
 
@@ -383,8 +385,24 @@ def aggregate(
     fused with the wide merge (:mod:`repro.core.pipeline`), with a single
     host readback for the stats.  ``pipeline="host"`` selects the
     host-orchestrated reference loop (exact per-merge-level accounting).
+
+    ``mesh`` (a :class:`jax.sharding.Mesh`) shards that one device
+    program over ``mesh_axis`` (default: the mesh's first axis): each
+    device runs run generation over its shard, then a key-range
+    ``all_to_all`` exchanges the locally aggregated sorted fragments and
+    each range owner merges them — the relation stays globally sorted by
+    the composite key, and ``stats.rows_exchanged`` records the shuffle
+    volume (valid rows on the wire, which local early aggregation keeps
+    below the input row count on duplicate-heavy data).  In-sort +
+    ``pipeline="device"`` only; ``mesh=None`` is today's single-device
+    program, bit for bit.
     """
     cfg = cfg or ExecConfig()
+    if mesh is not None and algorithm not in ("auto", "insort"):
+        raise ValueError(
+            f"mesh-sharded aggregation is in-sort only, got algorithm="
+            f"{algorithm!r}"
+        )
     if not isinstance(aggs, AggSpec):
         aggs = AggSpec(aggs) if isinstance(aggs, str) else AggSpec(*aggs)
     packed = by.pack(columns)
@@ -410,11 +428,17 @@ def aggregate(
     sort_based = algorithm in ("auto", "insort", "sort_then_stream", "inmemory")
     plan["algorithm"] = "insort" if algorithm == "auto" else algorithm
     plan["pipeline"] = pipeline if algorithm in ("auto", "insort") else "host"
+    if mesh is not None:
+        from repro.core.pipeline import resolve_mesh_axis
+
+        axis = resolve_mesh_axis(mesh, mesh_axis)
+        plan["mesh"] = {"axis": axis, "world": int(mesh.shape[axis])}
     with key_dtype_context(by.key_dtype):
         if algorithm in ("auto", "insort"):
             state, stats = insort_mod.insort_aggregate(
                 packed, values, cfg, output_estimate=output_estimate,
                 backend=backend, widths=widths, pipeline=pipeline,
+                mesh=mesh, mesh_axis=mesh_axis,
             )
         elif algorithm == "sort_then_stream":
             state, stats = insort_mod.sort_then_stream_aggregate(

@@ -272,6 +272,10 @@ class SpillStats:
     rows_emitted: int = 0  # rows streamed out of the wide merge's left edge
     index_overflowed: bool = False
     max_index_occupancy: int = 0
+    # shuffle-volume accounting (mesh-sharded pipeline): valid rows that
+    # entered the cross-shard all_to_all exchange, summed over shards.
+    # 0 for every single-device plan.
+    rows_exchanged: int = 0
 
     @property
     def total_spill_rows(self) -> int:
@@ -281,6 +285,28 @@ class SpillStats:
         d = dataclasses.asdict(self)
         d["total_spill_rows"] = self.total_spill_rows
         return d
+
+    @classmethod
+    def reduce_shards(cls, shards: "list[SpillStats]") -> "SpillStats":
+        """Host twin of :meth:`DeviceSpillStats.cross_shard`: combine
+        per-shard accounting into the global view — counters add, depth
+        and peak-occupancy take the max, flags OR.  Used by tests to
+        predict the sharded pipeline's stats from per-shard references."""
+        assert shards, "reduce_shards needs at least one shard"
+        return cls(
+            rows_spilled_run_generation=sum(
+                s.rows_spilled_run_generation for s in shards
+            ),
+            rows_spilled_merge=sum(s.rows_spilled_merge for s in shards),
+            runs_generated=sum(s.runs_generated for s in shards),
+            merge_steps=sum(s.merge_steps for s in shards),
+            merge_levels=max(s.merge_levels for s in shards),
+            pages_read=sum(s.pages_read for s in shards),
+            rows_emitted=sum(s.rows_emitted for s in shards),
+            index_overflowed=any(s.index_overflowed for s in shards),
+            max_index_occupancy=max(s.max_index_occupancy for s in shards),
+            rows_exchanged=sum(s.rows_exchanged for s in shards),
+        )
 
 
 @jax.tree_util.register_dataclass
@@ -314,12 +340,39 @@ class DeviceSpillStats:
     max_index_occupancy: jax.Array
     run_buffer_overflowed: jax.Array
     merge_dropped_rows: jax.Array
+    rows_exchanged: jax.Array
 
     @classmethod
     def zeros(cls) -> "DeviceSpillStats":
         z = jnp.int32(0)
         f = jnp.bool_(False)
-        return cls(z, z, z, z, z, z, z, f, z, f, f)
+        return cls(z, z, z, z, z, z, z, f, z, f, f, z)
+
+    def cross_shard(self, axis_name: str) -> "DeviceSpillStats":
+        """Reduce per-shard accounting to the global view inside a
+        ``shard_map`` region: row/step counters ``psum``, merge depth and
+        peak index occupancy ``pmax``, and the loud-failure flags OR
+        (``pmax`` over their int casts) — so a single shard's overflow
+        trips :meth:`finalize` globally.  The result is replicated; the
+        sharded pipeline's stats output therefore still needs only ONE
+        host readback."""
+        ps = lambda x: jax.lax.psum(x, axis_name)
+        pm = lambda x: jax.lax.pmax(x, axis_name)
+        por = lambda x: pm(x.astype(jnp.int32)) > 0
+        return DeviceSpillStats(
+            rows_spilled_run_generation=ps(self.rows_spilled_run_generation),
+            rows_spilled_merge=ps(self.rows_spilled_merge),
+            runs_generated=ps(self.runs_generated),
+            merge_steps=ps(self.merge_steps),
+            merge_levels=pm(self.merge_levels),
+            pages_read=ps(self.pages_read),
+            rows_emitted=ps(self.rows_emitted),
+            index_overflowed=por(self.index_overflowed),
+            max_index_occupancy=pm(self.max_index_occupancy),
+            run_buffer_overflowed=por(self.run_buffer_overflowed),
+            merge_dropped_rows=por(self.merge_dropped_rows),
+            rows_exchanged=ps(self.rows_exchanged),
+        )
 
     def finalize(self) -> SpillStats:
         """One host readback → plain :class:`SpillStats` (the pipeline's
@@ -347,4 +400,5 @@ class DeviceSpillStats:
             rows_emitted=int(self.rows_emitted),
             index_overflowed=bool(self.index_overflowed),
             max_index_occupancy=int(self.max_index_occupancy),
+            rows_exchanged=int(self.rows_exchanged),
         )

@@ -16,19 +16,29 @@ property*:
      fragments it received — output is locally sorted, and globally
      sorted by (range owner, key): a distributed ORDER BY for free.
 
+The exchange core (:func:`exchange_sorted_fragments`) is shared with the
+mesh-sharded device-resident pipeline (:mod:`repro.core.pipeline`), which
+runs full external run generation per shard before the same key-range
+all_to_all.
+
+Overflow is LOUD: every place a fixed-capacity buffer can cut live rows —
+the local-aggregation trim to ``capacity``, the per-peer send quota, and
+the post-merge trim back to ``capacity`` — returns a device flag instead
+of silently dropping, and :func:`make_distributed_groupby` raises on it
+(matching the PR 3 wide merge's ``merge_dropped_rows`` contract).
+
 ``sparse_embedding_grad`` applies the same pipeline to embedding-table
 gradients: (token, grad) pairs dedup-aggregate locally, then only unique
 rows travel.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import merge as merge_mod
 from repro.core import sorted_ops
 from repro.core.types import AggState, empty_key, rows_to_state
 from repro.distributed._compat import shard_map
@@ -43,93 +53,174 @@ def _range_of(keys, world):
 
 
 def _local_group_sorted(keys, payload, capacity):
+    """Local early aggregation trimmed to ``capacity`` — returns the
+    trimmed state plus the live-rows-cut flag (more unique keys in this
+    shard's slice than ``capacity`` is row loss, the same as the other
+    two overflow sites)."""
     st = sorted_ops.sorted_groupby(keys, payload)
-    return jax.tree.map(lambda x: x[:capacity], st)
+    return merge_mod.trim_to_capacity(st, capacity)
 
 
-def make_distributed_groupby(mesh, axis: str = "data", *, capacity: int):
+def _fill_like(x):
+    if x.dtype in (jnp.uint32, jnp.uint64):
+        return empty_key(x.dtype)
+    return jnp.zeros((), x.dtype)
+
+
+def exchange_sorted_fragments(st: AggState, axis: str, world: int, *, quota: int,
+                              nsamp: int = 64):
+    """Key-range ``all_to_all`` of a *sorted, duplicate-free* local state.
+
+    Range boundaries are SAMPLED (sample-sort style): fixed uniform ranges
+    collapse under key skew, so each shard contributes a sorted sample of
+    its keys; the gathered sample's quantiles give identical, data-driven
+    edges on every shard.  Sorted local output ⇒ the per-peer send
+    segments are two searchsorted cuts, "partitioning enforced together
+    with sorting" (§2.1).  Each peer receives a sorted, EMPTY-padded
+    fragment of exactly ``quota`` rows.
+
+    Returns ``(recv, rows_sent, send_dropped)``:
+
+    * ``recv`` — AggState of ``world * quota`` rows; rows
+      ``[i*quota, (i+1)*quota)`` are peer ``i``'s sorted fragment, and
+      fragment key ranges ascend with ``i`` (global order = (owner, key));
+    * ``rows_sent`` — valid rows this shard put on the wire (shuffle
+      volume; ``psum`` it for the global count);
+    * ``send_dropped`` — True iff some send segment exceeded ``quota``
+      and live rows were cut.  Callers must surface this loudly; with
+      ``quota >= st.capacity`` it is statically impossible.
+    """
+    capacity = st.capacity
+    occ = jnp.maximum(st.occupancy(), 1)
+    pos = jnp.minimum((jnp.arange(nsamp) * occ) // nsamp, capacity - 1)
+    sample = jnp.take(st.keys, pos)
+    all_samp = jnp.sort(jax.lax.all_gather(sample, axis).reshape(-1))
+    eidx = (jnp.arange(1, world) * (world * nsamp)) // world
+    inner = jnp.take(all_samp, eidx)
+    cuts = jnp.searchsorted(st.keys, inner, side="left").astype(jnp.int32)
+    ends = jnp.concatenate([cuts, jnp.asarray([capacity], jnp.int32)])
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), cuts])
+    # segment i = rows [starts[i], ends[i]) of the sorted local state; the
+    # EMPTY tail beyond occupancy lands in the last segment and pads it.
+    seg_valid = jnp.minimum(ends, st.occupancy()) - jnp.minimum(
+        starts, st.occupancy()
+    )
+    rows_sent = jnp.sum(seg_valid, dtype=jnp.int32)
+    send_dropped = jnp.any(seg_valid > quota)
+    idx = starts[:, None] + jnp.arange(quota, dtype=jnp.int32)[None, :]
+    valid_send = idx < ends[:, None]
+    idx = jnp.minimum(idx, capacity - 1)
+
+    def gather_rows(x):
+        g = jnp.take(x, idx.reshape(-1), axis=0)
+        mask = valid_send.reshape(-1)
+        return jnp.where(mask.reshape((-1,) + (1,) * (g.ndim - 1)),
+                         g, _fill_like(x))
+
+    send = jax.tree.map(gather_rows, st)
+    recv = jax.tree.map(
+        lambda x: jax.lax.all_to_all(
+            x.reshape((world, quota) + x.shape[1:]), axis, 0, 0,
+            tiled=False,
+        ).reshape((world * quota,) + x.shape[1:]),
+        send,
+    )
+    return recv, rows_sent, send_dropped
+
+
+def merge_received_fragments(recv: AggState, world: int, quota: int, *,
+                             backend: str = "auto"):
+    """Local wide merge of the ``world`` sorted fragments an
+    :func:`exchange_sorted_fragments` shard received: a balanced tree of
+    linear merge-absorbs (§3.4) — each fragment is sorted, duplicate-free
+    and EMPTY-padded, so no re-sort is ever needed.  Returns the merged
+    state at capacity ``world * quota`` (trim + loud-overflow is the
+    caller's policy, see :func:`repro.core.merge.trim_to_capacity`)."""
+    frags = [
+        jax.tree.map(lambda x: x[i * quota : (i + 1) * quota], recv)
+        for i in range(world)
+    ]
+    return sorted_ops.merge_absorb_many(frags, backend=backend,
+                                        assume_unique=True)
+
+
+def make_distributed_groupby(mesh, axis: str = "data", *, capacity: int,
+                             on_overflow: str = "raise"):
     """Returns fn(keys (n_loc,), payload (n_loc, V)) → AggState per device,
-    covering this device's key range (globally sorted across devices)."""
+    covering this device's key range (globally sorted across devices).
+
+    ``on_overflow`` controls what happens when fixed capacities would cut
+    live rows (a send segment over its ``capacity // world`` quota, or a
+    shard's merged fragments over ``capacity``): ``"raise"`` (default)
+    reads one replicated flag back after the exchange and raises
+    RuntimeError — the loud-failure contract of the PR 3 wide merge;
+    ``"flag"`` returns ``(state, dropped)`` with the device flag for
+    callers embedding the exchange in a larger jitted program.
+    """
+    if on_overflow not in ("raise", "flag"):
+        raise ValueError(f"unknown on_overflow {on_overflow!r}: raise|flag")
     world = mesh.shape[axis]
+    quota = capacity // world
 
     def local_fn(keys, payload):
         keys = keys.reshape(-1)
         payload = payload.reshape(keys.shape[0], -1)
         # 1. local early aggregation — the paper's §3 on-device
-        st = _local_group_sorted(keys, payload, capacity)
-        # 2. key-range exchange with SAMPLED range boundaries (sample-sort
-        #    style): fixed uniform ranges collapse under key skew, so each
-        #    device contributes a sorted sample of its keys; the gathered
-        #    sample's quantiles give identical, data-driven edges on every
-        #    device.  Sorted local output ⇒ cuts are two searchsorted ops.
-        nsamp = 64
-        occ = jnp.maximum(st.occupancy(), 1)
-        pos = jnp.minimum((jnp.arange(nsamp) * occ) // nsamp, capacity - 1)
-        sample = jnp.take(st.keys, pos)
-        all_samp = jnp.sort(jax.lax.all_gather(sample, axis).reshape(-1))
-        eidx = (jnp.arange(1, world) * (world * nsamp)) // world
-        inner = jnp.take(all_samp, eidx)
-        cuts = jnp.searchsorted(st.keys, inner, side="left")
-        starts = jnp.concatenate([jnp.zeros((1,), cuts.dtype), cuts])
-        # fixed per-peer quota: capacity // world rows (overflow drops are
-        # counted by callers via occupancy; tests size capacity generously)
-        quota = capacity // world
-        idx = starts[:, None] + jnp.arange(quota)[None, :]
-        valid_send = idx < jnp.concatenate([cuts, jnp.array([capacity])])[:, None]
-        idx = jnp.minimum(idx, capacity - 1)
-
-        def gather_rows(x):
-            g = jnp.take(x, idx.reshape(-1), axis=0)
-            mask = valid_send.reshape(-1)
-            return jnp.where(mask.reshape((-1,) + (1,) * (g.ndim - 1)),
-                             g, _fill_like(x))
-
-        send = jax.tree.map(gather_rows, st)
-        recv = jax.tree.map(
-            lambda x: jax.lax.all_to_all(
-                x.reshape((world, quota) + x.shape[1:]), axis, 0, 0,
-                tiled=False,
-            ).reshape((world * quota,) + x.shape[1:]),
-            send,
+        st, local_dropped = _local_group_sorted(keys, payload, capacity)
+        # 2. sampled key-range exchange (shared with the sharded pipeline)
+        recv, _sent, send_dropped = exchange_sorted_fragments(
+            st, axis, world, quota=quota
         )
-        # 3. local wide merge of `world` sorted fragments: each peer's
-        #    slice arrives sorted and EMPTY-padded, so a balanced tree of
-        #    linear merge-absorbs (§3.4) replaces the former full re-sort.
-        frags = [
-            jax.tree.map(lambda x: x[i * quota : (i + 1) * quota], recv)
-            for i in range(world)
-        ]
-        merged = sorted_ops.merge_absorb_many(frags, assume_unique=True)
-        return jax.tree.map(lambda x: x[:capacity], merged)
-
-    def _fill_like(x):
-        if x.dtype in (jnp.uint32, jnp.uint64):
-            return empty_key(x.dtype)
-        if jnp.issubdtype(x.dtype, jnp.floating):
-            return jnp.zeros((), x.dtype)
-        return jnp.zeros((), x.dtype)
+        # 3. local wide merge of the received sorted fragments
+        merged = merge_received_fragments(recv, world, quota)
+        merged, recv_dropped = merge_mod.trim_to_capacity(merged, capacity)
+        dropped = jax.lax.pmax(
+            (local_dropped | send_dropped | recv_dropped).astype(jnp.int32),
+            axis,
+        ) > 0
+        return merged, dropped
 
     def run(keys, payload):
         fn = shard_map(
             local_fn, mesh=mesh,
             in_specs=(P(axis), P(axis, None)),
-            out_specs=AggState(
-                keys=P(axis), count=P(axis), sum=P(axis, None),
-                min=P(axis, None), max=P(axis, None),
+            out_specs=(
+                AggState(
+                    keys=P(axis), count=P(axis), sum=P(axis, None),
+                    min=P(axis, None), max=P(axis, None),
+                ),
+                P(),
             ),
         )
-        return fn(keys, payload)
+        state, dropped = fn(keys, payload)
+        if on_overflow == "flag":
+            return state, dropped
+        if bool(dropped):  # one replicated-scalar readback, eager callers
+            raise RuntimeError(
+                "distributed group-by dropped rows: received fragments "
+                f"exceeded capacity={capacity} (quota {quota} rows/peer) "
+                "on at least one shard — raise `capacity` (results would "
+                "be missing keys/counts)"
+            )
+        return state
 
     return run
 
 
 def sparse_embedding_grad(tokens, grads, vocab: int, mesh, axis="data",
-                          capacity: int | None = None):
+                          capacity: int | None = None,
+                          on_overflow: str = "raise"):
     """Aggregate (token, grad_row) pairs across devices sort-based, then
     scatter into the dense (V, D) gradient.  Wire volume: unique rows per
-    range shard instead of the full dense table all-reduce."""
+    range shard instead of the full dense table all-reduce.
+
+    The default ``on_overflow="raise"`` reads one replicated flag back
+    per call and raises on row loss — eager (host-driver) use only.
+    Inside ``jit``/``grad`` pass ``on_overflow="flag"``: the result is
+    ``(state, dropped)`` with the device flag for the caller to surface.
+    """
     d = grads.shape[-1]
     capacity = capacity or tokens.size
-    gb = make_distributed_groupby(mesh, axis, capacity=capacity)
-    st = gb(tokens.reshape(-1).astype(jnp.uint32), grads.reshape(-1, d))
-    return st
+    gb = make_distributed_groupby(mesh, axis, capacity=capacity,
+                                  on_overflow=on_overflow)
+    return gb(tokens.reshape(-1).astype(jnp.uint32), grads.reshape(-1, d))

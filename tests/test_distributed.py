@@ -45,6 +45,51 @@ def test_distributed_groupby_matches_oracle():
     """)
 
 
+def test_distributed_groupby_overflow_fails_loudly():
+    """Regression: the gather/fill path used to drop rows silently when a
+    shard's received fragments exceeded ``capacity`` (or a send segment
+    its per-peer quota).  It must fail loudly like the PR 3 wide merge —
+    or hand back the device flag for jit-embedded callers."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.groupby import make_distributed_groupby
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(0)
+        n = 8 * 4096
+        keys = rng.integers(0, 700, n).astype(np.uint32)
+        pay = rng.normal(size=(n, 2)).astype(np.float32)
+        # capacity 256 < unique keys per range: fragments must overflow
+        gb = make_distributed_groupby(mesh, "data", capacity=256)
+        try:
+            with mesh:
+                gb(jnp.asarray(keys), jnp.asarray(pay))
+            raise SystemExit("overflow did not raise")
+        except RuntimeError as e:
+            assert "dropped rows" in str(e), e
+        # flag mode: same condition surfaces as a device scalar instead
+        gb = make_distributed_groupby(mesh, "data", capacity=256,
+                                      on_overflow="flag")
+        with mesh:
+            st, dropped = gb(jnp.asarray(keys), jnp.asarray(pay))
+        assert bool(dropped)
+        # generous capacity: no flag, exact oracle (unchanged behavior)
+        gb = make_distributed_groupby(mesh, "data", capacity=4096,
+                                      on_overflow="flag")
+        with mesh:
+            st, dropped = gb(jnp.asarray(keys), jnp.asarray(pay))
+        assert not bool(dropped)
+        # all-unique keys: the LOCAL aggregation trim (before any
+        # exchange) is the loss site — must flag too
+        uniq = np.arange(n, dtype=np.uint32)
+        gb = make_distributed_groupby(mesh, "data", capacity=1024,
+                                      on_overflow="flag")
+        with mesh:
+            st, dropped = gb(jnp.asarray(uniq), jnp.asarray(pay))
+        assert bool(dropped)
+        print("groupby loud overflow OK")
+    """)
+
+
 def test_ep_moe_grad_and_parity():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses as dc

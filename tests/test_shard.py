@@ -1,0 +1,257 @@
+"""Mesh-sharded pipeline tests (8 fake CPU devices via subprocess — the
+main test process must keep seeing 1 device, per the dry-run contract).
+
+Parity contract: at every world size, for every run-generation policy and
+both key dtypes, the sharded program's relation (keys, counts, sums) is
+EXACTLY the single-device pipeline's, and its reduced SpillStats equal
+the shard-wise reduction of per-shard single-device references
+(``SpillStats.reduce_shards``) — the exchange itself adds only
+``rows_exchanged``.  Plus: edge inputs (empty / one hot key / skewed key
+band), and a transfer-guard proof that the whole mesh program still
+performs exactly one stats readback.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ENV = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8",
+           PYTHONPATH="src")
+
+
+def run_py(code: str):
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=ENV, capture_output=True, text=True, timeout=560,
+                       cwd=os.path.dirname(os.path.dirname(__file__)) or ".")
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+_PARITY = """
+    import jax, numpy as np
+    from repro.core import pipeline
+    from repro.core.types import ExecConfig, SpillStats, empty_key
+    from repro.core.operators import validate_against_oracle
+
+    WORLD = {world}
+    CFG = ExecConfig(memory_rows=256, page_rows=32, fanin=4, batch_rows=64)
+    N = 4096  # divisible by every world size
+    rng = np.random.default_rng(7)
+    mesh = jax.make_mesh((WORLD,), ("data",))
+
+    def strip(st):
+        k = np.asarray(st.keys)
+        v = k != empty_key(k.dtype)
+        return k[v], np.asarray(st.count)[v], np.asarray(st.sum)[v]
+
+    for kd in (np.uint32, np.uint64):
+        for policy in ("traditional", "inrun_dedup", "early_agg", "rs"):
+            keys = rng.integers(0, 1200, N).astype(kd)
+            if kd == np.uint64:
+                keys = keys << np.uint64(30)  # spread past 32 bits
+            pay = rng.normal(size=(N, 1)).astype(np.float32)
+            st, stats = pipeline.insort_aggregate_device(
+                keys, pay, CFG, policy=policy, mesh=mesh)
+            validate_against_oracle(st, keys, pay)
+            gk, gc, gs = strip(st)
+            assert np.all(gk[:-1] < gk[1:])  # globally sorted, unique
+            # exact relation parity with the single-device program
+            st1, _ = pipeline.insort_aggregate_device(
+                keys, pay, CFG, policy=policy)
+            rk, rc, rs_ = strip(st1)
+            np.testing.assert_array_equal(gk, rk)
+            np.testing.assert_array_equal(gc, rc)
+            np.testing.assert_allclose(gs, rs_, rtol=2e-4, atol=2e-3)
+            # exact stats parity: the sharded accounting is the reduction
+            # of per-shard single-device references; the exchange adds
+            # only rows_exchanged
+            n_loc = N // WORLD
+            refs = [pipeline.insort_aggregate_device(
+                        keys[i*n_loc:(i+1)*n_loc], pay[i*n_loc:(i+1)*n_loc],
+                        CFG, policy=policy)[1] for i in range(WORLD)]
+            want = SpillStats.reduce_shards(refs).as_dict()
+            got = stats.as_dict()
+            assert got.pop("rows_exchanged") > 0
+            want.pop("rows_exchanged")
+            assert got == want, (policy, np.dtype(kd).name, got, want)
+            print("OK", np.dtype(kd).name, policy)
+    print("sharded parity OK at world", WORLD)
+"""
+
+
+@pytest.mark.parametrize("world", (1, 2, 8))
+def test_sharded_pipeline_matches_single_device(world):
+    run_py(_PARITY.format(world=world))
+
+
+def test_non_shardable_backend_refused_at_front_door():
+    """The mesh path guards on Backend.shardable before building any
+    program (in-process: a world-1 mesh needs no fake devices)."""
+    import jax
+    import numpy as np
+
+    from repro.core import dispatch, pipeline
+    from repro.core.types import ExecConfig
+
+    be = dispatch.get_backend("xla")
+    dispatch.register_backend(
+        "nosharding",
+        lambda: dispatch.Backend(
+            name="nosharding", argsort=be.argsort,
+            segmented_combine=be.segmented_combine,
+            merge_sorted=be.merge_sorted, shardable=False,
+        ),
+    )
+    try:
+        mesh = jax.make_mesh((1,), ("data",))
+        keys = np.arange(64, dtype=np.uint32)
+        with pytest.raises(dispatch.BackendUnavailable, match="shard_map"):
+            pipeline.aggregate_device(keys, None, ExecConfig(),
+                                      backend="nosharding", mesh=mesh)
+        # single-device plans are untouched by the capability flag
+        st, _ = pipeline.insort_aggregate_device(keys, None, ExecConfig(),
+                                                 backend="nosharding")
+        assert int(st.occupancy()) == 64
+    finally:
+        dispatch._loaders.pop("nosharding", None)
+        dispatch._cache.pop("nosharding", None)
+
+
+def test_sharded_pipeline_edges():
+    run_py("""
+        import jax, numpy as np
+        from repro.core import pipeline
+        from repro.core.types import ExecConfig, EMPTY
+        from repro.core.operators import validate_against_oracle
+
+        CFG = ExecConfig(memory_rows=256, page_rows=32, fanin=4, batch_rows=64)
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(3)
+
+        # empty input
+        st, stats = pipeline.insort_aggregate_device(
+            np.zeros((0,), np.uint32), None, CFG, mesh=mesh)
+        assert int(st.occupancy()) == 0 and stats.total_spill_rows == 0
+
+        # input not divisible by world (EMPTY padding path)
+        keys = rng.integers(0, 900, 4001).astype(np.uint32)
+        st, _ = pipeline.insort_aggregate_device(
+            keys, None, CFG, policy="early_agg", mesh=mesh)
+        validate_against_oracle(st, keys)
+
+        # one hot key: a single group, every shard sends one row to the
+        # same range owner
+        hot = np.full(12000, 7, np.uint32)
+        st, stats = pipeline.insort_aggregate_device(
+            hot, None, CFG, policy="rs", mesh=mesh)
+        k = np.asarray(st.keys)
+        assert int(st.occupancy()) == 1
+        assert int(np.asarray(st.count)[k == 7][0]) == 12000
+        assert stats.rows_exchanged == 8  # one surviving row per shard
+
+        # skewed key range: every key inside a narrow band high in the
+        # key space — fixed uniform ranges would send everything to one
+        # owner; the sampled cuts adapt
+        keys = (rng.integers(0, 500, 4096) + (1 << 31)).astype(np.uint32)
+        pay = rng.normal(size=(4096, 2)).astype(np.float32)
+        st, stats = pipeline.insort_aggregate_device(
+            keys, pay, CFG, policy="rs", mesh=mesh)
+        validate_against_oracle(st, keys, pay)
+        # rows landed on several owners, not one
+        kk = np.asarray(st.keys).reshape(8, -1)
+        owners = (kk != EMPTY).any(axis=1).sum()
+        assert owners >= 4, owners
+
+        # plane-width restriction travels through the exchange
+        st, _ = pipeline.insort_aggregate_device(
+            keys, pay, CFG, policy="rs", widths=(2, 0, 0), mesh=mesh)
+        assert st.widths == (2, 0, 0)
+        validate_against_oracle(st, keys, pay)
+        print("sharded edges OK")
+    """)
+
+
+def test_sharded_pipeline_single_readback_under_transfer_guard():
+    run_py("""
+        import jax, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import pipeline
+        from repro.core.types import DeviceSpillStats, ExecConfig
+        from repro.core.operators import validate_against_oracle
+
+        CFG = ExecConfig(memory_rows=256, page_rows=32, fanin=4, batch_rows=64)
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(5)
+        keys = rng.integers(0, 1200, 4096).astype(np.uint32)
+        pay = rng.normal(size=(4096, 1)).astype(np.float32)
+        dk = jax.device_put(keys, NamedSharding(mesh, P("data")))
+        dp = jax.device_put(pay, NamedSharding(mesh, P("data", None)))
+        # compile outside the guard; the guard then proves steady state
+        state, _ = pipeline.aggregate_device(dk, dp, CFG, policy="rs",
+                                             mesh=mesh)
+        jax.block_until_ready(state)
+        with jax.transfer_guard("disallow"):
+            state, dstats = pipeline.aggregate_device(dk, dp, CFG,
+                                                      policy="rs", mesh=mesh)
+            jax.block_until_ready((state, dstats))
+        assert isinstance(dstats, DeviceSpillStats)
+        stats = dstats.finalize()  # the single readback, outside the guard
+        assert stats.total_spill_rows > 0
+        assert 0 < stats.rows_exchanged < len(keys)
+        validate_against_oracle(state, keys, pay)
+        print("sharded transfer guard OK")
+    """)
+
+
+def test_sharded_schema_front_door_and_pallas_smoke():
+    run_py("""
+        import jax, numpy as np
+        import repro
+        from repro.core import pipeline
+        from repro.core.schema import KeySpec
+        from repro.core.types import ExecConfig
+        from repro.core.operators import validate_against_oracle, group_by
+
+        CFG = ExecConfig(memory_rows=256, page_rows=32, fanin=4, batch_rows=64)
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(11)
+        keys = rng.integers(0, 1200, 4096).astype(np.uint32)
+        pay = rng.normal(size=(4096, 1)).astype(np.float32)
+        res = repro.aggregate({"k": keys}, by=KeySpec.of(k=12), values=pay,
+                              aggs=("count", "sum"), cfg=CFG, order_by=True,
+                              mesh=mesh)
+        assert res.plan["mesh"] == {"axis": "data", "world": 8}
+        assert res.plan["pipeline"] == "device"
+        validate_against_oracle(res.state, keys, pay)
+        rel = res.relation()
+        assert np.all(np.diff(rel["k"].astype(np.int64)) > 0)
+
+        st, _ = group_by(keys, pay, CFG, mesh=mesh)
+        validate_against_oracle(st, keys, pay)
+
+        # mesh + non-device plans must refuse, not silently single-device
+        try:
+            repro.aggregate({"k": keys}, by=KeySpec.of(k=12), cfg=CFG,
+                            algorithm="hash", mesh=mesh)
+            raise SystemExit("hash+mesh did not raise")
+        except ValueError:
+            pass
+        try:
+            group_by(keys, pay, CFG, pipeline="host", mesh=mesh)
+            raise SystemExit("host+mesh did not raise")
+        except ValueError:
+            pass
+
+        # the fused sharded program also compiles with the Pallas kernel
+        # backend (interpret mode off-TPU) — tiny size, one program
+        cfg = ExecConfig(memory_rows=64, page_rows=16, fanin=4, batch_rows=16)
+        mesh2 = jax.make_mesh((2,), ("data",))
+        k2 = rng.integers(0, 120, 400).astype(np.uint32)
+        p2 = rng.normal(size=(400, 1)).astype(np.float32)
+        st, _ = pipeline.insort_aggregate_device(
+            k2, p2, cfg, policy="early_agg", backend="pallas", mesh=mesh2)
+        validate_against_oracle(st, k2, p2)
+        print("sharded front door + pallas smoke OK")
+    """)
