@@ -1,16 +1,17 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-absorb bench-keywidth bench-shard bench-figures
+.PHONY: test bench bench-absorb bench-keywidth bench-shard bench-stream bench-figures
 
 test:           ## tier-1 suite (property tests skip if hypothesis absent)
 	python -m pytest -x -q
 
-bench:          ## smoke-mode absorb + key-width + pipeline + shard benches (CI sanity)
+bench:          ## smoke-mode absorb + key-width + pipeline + shard + stream benches (CI sanity)
 	python benchmarks/bench_absorb.py --smoke
 	python benchmarks/bench_keywidth.py --smoke
 	python benchmarks/bench_pipeline.py --smoke
 	python benchmarks/bench_shard.py --smoke
+	python benchmarks/bench_stream.py --smoke
 
 bench-absorb:   ## sort-absorb vs merge-absorb microbenchmark
 	python benchmarks/bench_absorb.py
@@ -23,6 +24,9 @@ bench-pipeline: ## host-loop vs device-resident end-to-end aggregate
 
 bench-shard:    ## mesh-sharded pipeline: per-world wall time + shuffle volume
 	python benchmarks/bench_shard.py
+
+bench-stream:   ## streamed vs resident pipeline: overlap + peak footprint
+	python benchmarks/bench_stream.py
 
 bench-figures:  ## paper-figure benchmark driver
 	python benchmarks/run.py

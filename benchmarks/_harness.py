@@ -33,17 +33,31 @@ def add_common_args(p: argparse.ArgumentParser, *, iters: int,
     return p
 
 
-def time_fn(fn, *args, iters: int, block_each: bool = False) -> float:
-    """Mean seconds per call of ``fn(*args)`` over ``iters`` timed calls,
+def time_fn(fn, *args, iters: int, block_each: bool = False,
+            reduce: str = "mean") -> float:
+    """Seconds per call of ``fn(*args)`` over ``iters`` timed calls,
     after one untimed warmup call (compile + caches).
 
     ``block_each=True`` blocks on every call's result (end-to-end latency
     per call — use when the loop body's dispatch overlap would hide host
     orchestration costs being measured); the default blocks once after
     the loop (amortized device throughput).
+
+    ``reduce`` picks the estimator: ``"mean"`` over the timed calls, or
+    ``"min"`` (fastest call — robust when other processes contend for
+    the cores, since interference only ever ADDS time).
     """
     out = fn(*args)  # warmup: compile + caches
     jax.block_until_ready(out)
+    if reduce == "min" and block_each:
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            times.append(time.perf_counter() - t0)
+        return min(times)
+    if reduce != "mean":
+        raise ValueError("reduce='min' requires block_each=True")
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -54,15 +68,39 @@ def time_fn(fn, *args, iters: int, block_each: bool = False) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+def device_memory_stats() -> dict:
+    """Peak / in-use device memory for report footprint tracking.
+
+    Backed by ``jax.local_devices()[0].memory_stats()`` where the runtime
+    exposes it (GPU/TPU); platforms without allocator stats (CPU) report
+    ``{"available": False, "note": "n/a"}`` so BENCH_*.json trajectories
+    always carry the field."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        stats = None
+    if not stats:
+        return {"available": False, "note": "n/a"}
+    out = {"available": True}
+    for k in ("bytes_in_use", "peak_bytes_in_use", "bytes_limit",
+              "largest_alloc_size"):
+        if k in stats:
+            out[k] = int(stats[k])
+    return out
+
+
 def write_json_report(report: dict, *, out: str | None, smoke: bool,
                       default_name: str) -> str | None:
     """Persist ``report`` as JSON.  Default path is the repo root (the
     committed ``BENCH_*.json`` convention); ``--smoke`` runs write
-    nothing unless the caller passed an explicit path."""
+    nothing unless the caller passed an explicit path.  Every report
+    carries the device kind and its peak-memory stats (footprint
+    trajectories, not just wall-clock)."""
     if out is None and not smoke:
         out = str(REPO_ROOT / default_name)
     if out:
-        report = dict(report, jax_device=jax.default_backend())
+        report = dict(report, jax_device=jax.default_backend(),
+                      device_memory=device_memory_stats())
         with open(out, "w") as f:
             json.dump(report, f, indent=2)
         print(f"wrote {out}")

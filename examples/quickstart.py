@@ -7,7 +7,10 @@ operator covers the in-memory, small-output, and large-output regimes
 while matching hash aggregation's spill and producing sorted output.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+      (QUICKSTART_N=... scales the log size; CI smoke uses a small one)
 """
+import os
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -17,8 +20,8 @@ from repro.core import (
 )
 
 rng = np.random.default_rng(0)
-N = 2_000_000
-n_users = 150_000
+N = int(os.environ.get("QUICKSTART_N", 2_000_000))
+n_users = max(16, N // 13)
 
 print(f"== web log: {N:,} records, ~{n_users:,} distinct users ==")
 users = (rng.zipf(1.3, N) % n_users).astype(np.uint32)
@@ -26,8 +29,11 @@ country = rng.integers(0, 50, N).astype(np.uint32)
 hour = rng.integers(0, 24, N).astype(np.uint32)
 latency = rng.gamma(2.0, 30.0, N).astype(np.float32)
 
-cfg = ExecConfig(memory_rows=65_536, page_rows=4_096, fanin=16,
-                 batch_rows=16_384)
+# memory budget ~N/32 (the paper's external regime), capped at the 64k
+# rows of the full-size demo — the smoke run compiles small programs
+M = max(1 << 10, min(1 << 16, 1 << (N.bit_length() - 5)))
+cfg = ExecConfig(memory_rows=M, page_rows=max(64, M // 16), fanin=16,
+                 batch_rows=max(256, M // 4))
 
 # 1) SELECT COUNT(DISTINCT user) — large input, medium output
 state, stats = insort_aggregate(users, None, cfg,
@@ -89,3 +95,25 @@ print(f"  first group user={rel['user'][0]} country={rel['country'][0]} "
       f"avg={float(rel['avg'][0, 0]):.1f}ms")
 print(f"  plan: {res.plan['predicted_spill_insort']:,.0f} predicted in-sort "
       f"spill vs {res.plan['predicted_spill_hash']:,.0f} hash")
+
+# 6) streamed ingest: the same query over an ITERATOR of column batches
+#    — the log never needs to be resident at once.  Each super-batch is
+#    device_put while the device aggregates the previous one (double
+#    buffering); the result is identical to the resident run above.
+from repro.data.pipeline import iter_column_batches
+
+log = {"user": users, "country": country, "hour": hour, "latency": latency}
+batches = iter_column_batches(log, rows=max(1, N // 8))  # e.g. log shards
+res_s = repro.aggregate(
+    batches,
+    by=spec,
+    values="latency",            # a column carried in each batch
+    aggs=repro.AggSpec("count", "avg"),
+    cfg=cfg,
+    output_estimate=n_users,
+)
+rel_s = res_s.relation()
+assert np.array_equal(rel_s["user"], rel["user"])
+assert np.array_equal(rel_s["count"], rel["count"])
+print(f"\nstreamed ingest ({8} batches): {res_s.occupancy():,} groups — "
+      f"identical relation, device footprint bounded by the batch size ✓")

@@ -9,6 +9,9 @@
 #                                 edge / transfer-guard tests (forced fake
 #                                 host devices in subprocesses) plus the
 #                                 shard benchmark in smoke mode
+#   scripts/test.sh --stream      streamed-pipeline selector: streamed vs
+#                                 resident parity + single-readback tests,
+#                                 then the streaming bench in smoke mode
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -17,6 +20,13 @@ if [[ "${1:-}" == "--pipeline" ]]; then
   shift
   python -m pytest -x -q tests/test_pipeline.py "$@"
   make bench
+  exit 0
+fi
+
+if [[ "${1:-}" == "--stream" ]]; then
+  shift
+  python -m pytest -x -q tests/test_stream.py "$@"
+  python benchmarks/bench_stream.py --smoke
   exit 0
 fi
 

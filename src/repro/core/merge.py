@@ -297,10 +297,12 @@ def wide_merge_device(
     cursors, index, out, out_cur, pages_read, max_occ, overflow = jax.lax.while_loop(
         cond, body, carry
     )
-    # resident > W means the left-shift trim cut live rows: that is data
-    # loss, not just "more memory than the model allows" (the soft
-    # `overflow` flag at resident > index_rows).  Callers must fail loudly.
-    dropped = max_occ > W
+    # resident > W means the left-shift trim cut live rows, and out_cur
+    # past out_capacity means emitted rows fell off the scatter's "drop"
+    # edge: either way that is data loss, not just "more memory than the
+    # model allows" (the soft `overflow` flag at resident > index_rows).
+    # Callers must fail loudly.
+    dropped = (max_occ > W) | (out_cur > out_capacity)
     return out, out_cur, pages_read, max_occ, overflow, dropped
 
 
@@ -338,10 +340,12 @@ def wide_merge(
         )
     if bool(dropped):
         raise RuntimeError(
-            "wide-merge index overflowed its capacity and dropped rows "
-            f"(resident {int(max_occ)} > index_rows + page_rows); merge "
-            "fewer runs at once (pre-merge levels / larger output "
-            "estimate) or raise index_rows"
+            "wide merge dropped rows: either the merge index overflowed "
+            f"(resident {int(max_occ)} > index_rows + page_rows = "
+            f"{(index_rows or cfg.memory_rows) + cfg.page_rows}) or the "
+            f"output overran its capacity (emitted {int(out_cur)} > "
+            f"{out_capacity}); merge fewer runs at once (pre-merge levels) "
+            "or raise index_rows / the output estimate"
         )
     stats.merge_steps += 1
     stats.merge_levels += 1

@@ -19,6 +19,7 @@ operators that reuse a single sort:
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -90,8 +91,29 @@ def group_by(
     ``mesh_axis`` — per-shard run generation, a key-range ``all_to_all``
     of the locally aggregated outputs, and a per-owner merge; output is
     globally sorted by (range owner, key).  In-sort only.
+
+    ``keys`` may instead be an iterator of chunks — bare key arrays, or
+    ``(keys, payload)`` pairs — absorbed through the double-buffered
+    streamed pipeline (in-sort + device only; pass ``payload=None``).
     """
     cfg = cfg or ExecConfig()
+    if isinstance(keys, Iterator):
+        if algorithm not in ("auto", "insort") or pipeline != "device":
+            raise ValueError(
+                "streamed input runs the in-sort device pipeline only "
+                f"(got algorithm={algorithm!r}, pipeline={pipeline!r})"
+            )
+        if payload is not None:
+            raise ValueError(
+                "with streamed input, pass payload chunks as (keys, "
+                "payload) pairs in the iterator, not payload="
+            )
+        from repro.core import pipeline as pipeline_mod
+
+        return pipeline_mod.insort_aggregate_device_stream(
+            keys, cfg, backend=backend, widths=widths,
+            output_estimate=output_estimate, mesh=mesh, mesh_axis=mesh_axis,
+        )
     if algorithm in ("auto", "insort"):
         return insort_mod.insort_aggregate(
             keys, payload, cfg, output_estimate=output_estimate, backend=backend,

@@ -13,14 +13,13 @@ policies (``traditional``, ``inrun_dedup``, ``early_agg``) and
 replacement selection (``rs``) run as a single jitted ``lax.scan`` over
 the pre-batched input:
 
-* runs are written into a preallocated, stacked RunStore-shaped device
+* the scan carry is an explicit, reusable pytree —
+  :class:`~repro.core.types.StreamEngineState` — holding the stacked
+  run buffer, the early-agg / replacement-selection tables, and all
+  spill counters as device scalars;
+* runs are written into the preallocated, stacked RunStore-shaped
   buffer via a data-dependent run-slot index carried through the scan
   (out-of-range slots drop, so "don't flush" is a no-op scatter);
-* occupancy, spill counters, and the replacement-selection frontier are
-  device carries; eviction is a bounded inner ``while_loop`` in the scan
-  body (the same :func:`~repro.core.run_generation.rs_split_absorb` /
-  :func:`~repro.core.run_generation.rs_evict_step` state machine as the
-  host reference);
 * the §4.3 pre-wide traditional merge levels (needed when O/M exceeds
   the fan-in, or the wide merge's index outgrows memory) are planned
   statically from the output estimate and run on device as pairwise
@@ -32,11 +31,22 @@ the pre-batched input:
   pytree — the only host synchronization in the whole pipeline is the
   final ``finalize()`` readback of stats + run lengths.
 
+Because the carry is a first-class pytree, the same engine also runs
+**streamed**: :class:`StreamingAggregator` / :func:`aggregate_device_stream`
+feed the scan super-batch by super-batch from the host, double-buffering
+the ``jax.device_put`` of chunk k+1 behind the absorb of chunk k, so
+inputs far larger than device memory flow through at compute speed with
+zero per-chunk readbacks (finalize stays the single sync).  Chunk count
+never enters trace shapes: one compile per super-batch geometry, with a
+pow2-bucketed tail.
+
 Sizing is static, derived from shapes alone: a run buffer of
 ``ceil(N/M)+O(1)`` slots (every flushed run carries > M unique rows, so
 the slot count is bounded by input over memory), each slot page-aligned.
 The batch count is bucketed to the next power of two (EMPTY batches are
-no-ops) so recompiles scale with log(N), not N.
+no-ops) so recompiles scale with log(N), not N.  Host (NumPy) inputs are
+padded to that bucketed geometry *before* the jit boundary, so calls
+that differ only in N share one compilation.
 
 The host loops remain the reference path for oracle-parity testing and
 for the paper's exact per-level accounting (Fig 14); the device
@@ -48,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 
 import jax
 import jax.numpy as jnp
@@ -62,20 +73,33 @@ from repro.core.types import (
     DeviceSpillStats,
     ExecConfig,
     SpillStats,
+    StreamEngineState,
     as_key_array,
     concat_states,
     empty_key,
     empty_like,
     empty_state,
+    expand_engine_scalars,
     key_dtype_context,
     rows_to_state,
+    squeeze_engine_scalars,
 )
 
 POLICIES = ("traditional", "inrun_dedup", "early_agg", "rs")
 
+# Trace-time log: every traced pipeline/stream program appends one entry
+# here.  Tests use it as a compile counter — a second call with a
+# different N but the same bucketed geometry must NOT append (the jit
+# cache hits, nothing retraces).
+TRACE_LOG: list[tuple] = []
+
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << (x - 1).bit_length() if x > 1 else 1
 
 
 def _num_batches(n: int, chunk: int) -> int:
@@ -121,161 +145,200 @@ def _pad_rows(state: AggState, rows: int) -> AggState:
 
 
 # ---------------------------------------------------------------------------
-# run generation as a lax.scan, per policy
+# the engine: init / step / finish over an explicit StreamEngineState
 # ---------------------------------------------------------------------------
 
 
-def _rungen_sortwrite(bk, bp, *, dedup: bool, C: int, backend: str, widths):
-    """``traditional`` / ``inrun_dedup``: one run per M-row chunk.  The
-    run-slot index is the scan step itself, so runs stream out as stacked
-    scan outputs — no carried buffer needed."""
-
-    def body(carry, xs):
-        ck, cp = xs
-        st = rows_to_state(ck, cp, widths=widths)
-        if dedup:
-            st = sorted_ops.absorb(st, backend=backend)
-        else:
-            st = sorted_ops.sort_state(st, backend=backend)
-        occ = st.occupancy()
-        return carry, (_pad_rows(st, C), occ)
-
-    _, (store, lens) = jax.lax.scan(body, jnp.int32(0), (bk, bp))
-    spilled = jnp.sum(lens, dtype=jnp.int32)
-    nruns = jnp.sum(lens > 0, dtype=jnp.int32)
-    kd = bk.dtype
-    width = 0 if bp is None else bp.shape[-1]
-    table = empty_state(0, width, key_dtype=kd, widths=widths)
-    return store, lens, table, spilled, nruns, jnp.bool_(False)
+def _engine_geometry(policy: str, M: int, B: int, P: int):
+    """Static per-policy geometry: (input chunk rows, run-slot rows,
+    table capacity, second-table capacity).  Unused tables carry
+    capacity 0 so the engine-state pytree stays uniform per policy."""
+    if policy in ("traditional", "inrun_dedup"):
+        return M, _round_up(M, P), 0, 0
+    if policy == "early_agg":
+        return B, _round_up(M + B, P), M, 0
+    if policy == "rs":
+        return B, _round_up(2 * M + 2 * B, P), M + 2 * B, M + 2 * B
+    raise ValueError(f"unknown run-generation policy {policy!r}")
 
 
-def _rungen_early_agg(bk, bp, *, M: int, R: int, C: int, backend: str, widths):
+def _engine_init(policy: str, *, M: int, B: int, P: int, R: int, width: int,
+                 key_dtype, widths) -> StreamEngineState:
+    """A fresh engine state with ``R`` preallocated run slots (traced —
+    call under jit so the buffers are born on device)."""
+    _, C, capT, capT2 = _engine_geometry(policy, M, B, P)
+    kd = np.dtype(key_dtype)
+    ws = widths if widths is not None else (width, width, width)
+    return StreamEngineState(
+        table=empty_state(capT, width, key_dtype=kd, widths=ws),
+        table2=empty_state(capT2, width, key_dtype=kd, widths=ws),
+        frontier=jnp.zeros((), dtype=kd),
+        store=_stacked_empty(R, C, width, key_dtype=kd, widths=ws),
+        lens=jnp.zeros((R,), jnp.int32),
+        cursor=jnp.int32(0),
+        ridx=jnp.int32(0),
+        spilled=jnp.int32(0),
+    )
+
+
+def _step_sortwrite(es: StreamEngineState, ck, cp, *, dedup: bool,
+                    backend: str, ws) -> StreamEngineState:
+    """``traditional`` / ``inrun_dedup``: one run per M-row batch, written
+    to the carried run slot (EMPTY batches are no-ops)."""
+    st = rows_to_state(ck, cp, widths=ws)
+    if dedup:
+        st = sorted_ops.absorb(st, backend=backend)
+    else:
+        st = sorted_ops.sort_state(st, backend=backend)
+    occ = st.occupancy()
+    R, C = es.run_slots, es.slot_rows
+    slot = jnp.where(occ > 0, es.ridx, R)
+    store = jax.tree.map(
+        lambda d, s: d.at[slot].set(s, mode="drop"), es.store, _pad_rows(st, C)
+    )
+    lens = es.lens.at[slot].set(occ, mode="drop")
+    return dataclasses.replace(
+        es, store=store, lens=lens,
+        ridx=es.ridx + (occ > 0).astype(jnp.int32),
+        spilled=es.spilled + occ,
+    )
+
+
+def _step_early_agg(es: StreamEngineState, ck, cp, *, M: int, backend: str,
+                    ws) -> StreamEngineState:
     """``early_agg`` (§3): the ordered in-memory index absorbs each sorted
     batch; when occupancy exceeds M the whole index content is written to
-    the run slot carried in the scan and memory restarts empty."""
-    t, B = bk.shape
-    kd = bk.dtype
-    width = 0 if bp is None else bp.shape[-1]
-    ws = widths if widths is not None else (width, width, width)
-    table0 = empty_state(M, width, key_dtype=kd, widths=ws)
-    buf0 = _stacked_empty(R, C, width, key_dtype=kd, widths=ws)
-    lens0 = jnp.zeros((R,), jnp.int32)
-
-    def body(carry, xs):
-        table, buf, lens, ridx, spilled = carry
-        ck, cp = xs
-        batch = sorted_ops.absorb(rows_to_state(ck, cp, widths=ws), backend=backend)
-        merged = sorted_ops.merge_absorb(
-            table, batch, backend=backend, assume_unique=True
-        )  # capacity M + B
-        occ = merged.occupancy()
-        flush = occ > M
-        # memory full: the entire index content becomes one sorted run in
-        # the carried slot; otherwise the (out-of-range) write drops.
-        slot = jnp.where(flush, ridx, R)
-        buf = jax.tree.map(
-            lambda d, s: d.at[slot].set(s, mode="drop"), buf, _pad_rows(merged, C)
-        )
-        lens = lens.at[slot].set(occ, mode="drop")
-        ridx = ridx + flush.astype(jnp.int32)
-        spilled = spilled + jnp.where(flush, occ, 0)
-        kept = jax.tree.map(lambda x: x[:M], merged)  # trim back to M
-        table = jax.tree.map(lambda e, k: jnp.where(flush, e, k), table0, kept)
-        return (table, buf, lens, ridx, spilled), None
-
-    init = (table0, buf0, lens0, jnp.int32(0), jnp.int32(0))
-    (table, buf, lens, ridx, spilled), _ = jax.lax.scan(body, init, (bk, bp))
-    # mirror the resident table into the next slot so a downstream wide
-    # merge always consumes the complete picture; it counts as a spilled
-    # run only when earlier slots spilled (host-reference semantics).
-    occ_t = table.occupancy()
-    buf = jax.tree.map(
-        lambda d, s: d.at[ridx].set(s, mode="drop"), buf, _pad_rows(table, C)
+    the carried run slot and memory restarts empty."""
+    R, C = es.run_slots, es.slot_rows
+    batch = sorted_ops.absorb(rows_to_state(ck, cp, widths=ws), backend=backend)
+    merged = sorted_ops.merge_absorb(
+        es.table, batch, backend=backend, assume_unique=True
+    )  # capacity M + B
+    occ = merged.occupancy()
+    flush = occ > M
+    # memory full: the entire index content becomes one sorted run in the
+    # carried slot; otherwise the (out-of-range) write drops.
+    slot = jnp.where(flush, es.ridx, R)
+    store = jax.tree.map(
+        lambda d, s: d.at[slot].set(s, mode="drop"), es.store,
+        _pad_rows(merged, C),
     )
-    lens = lens.at[ridx].set(occ_t, mode="drop")
-    spilled = spilled + jnp.where(ridx > 0, occ_t, 0)
-    nruns = ridx + ((ridx > 0) & (occ_t > 0)).astype(jnp.int32)
-    overflow = ridx + 1 > R
-    return buf, lens, table, jnp.where(ridx > 0, spilled, 0), nruns, overflow
+    lens = es.lens.at[slot].set(occ, mode="drop")
+    kept = jax.tree.map(lambda x: x[:M], merged)  # trim back to M
+    table0 = empty_like(es.table, M)
+    table = jax.tree.map(lambda e, k: jnp.where(flush, e, k), table0, kept)
+    return dataclasses.replace(
+        es, table=table, store=store, lens=lens,
+        ridx=es.ridx + flush.astype(jnp.int32),
+        spilled=es.spilled + jnp.where(flush, occ, 0),
+    )
 
 
-def _rungen_rs(bk, bp, *, M: int, B: int, R: int, C: int, backend: str, widths):
-    """Replacement selection (§3.3) folded into the scan: the two-table
-    partitioned b-tree is the carry, and the eviction scan is a bounded
-    inner ``while_loop`` writing B-row quanta at the carried
-    (run-slot, cursor) position.  A run closes when the open partition
-    drains (host semantics) or when its slot is within one quantum of
-    capacity (the device buffer's close-early rule — always legal, runs
-    only need to be sorted)."""
-    t, _B = bk.shape
-    kd = bk.dtype
-    width = 0 if bp is None else bp.shape[-1]
-    ws = widths if widths is not None else (width, width, width)
-    cap = M + 2 * B
-    table0 = empty_state(cap, width, key_dtype=kd, widths=ws)
-    buf0 = _stacked_empty(R, C, width, key_dtype=kd, widths=ws)
-    lens0 = jnp.zeros((R,), jnp.int32)
+def _step_rs(es: StreamEngineState, ck, cp, *, M: int, B: int, backend: str,
+             ws) -> StreamEngineState:
+    """Replacement selection (§3.3): the two-table partitioned b-tree is
+    the carry, and the eviction scan is a bounded inner ``while_loop``
+    writing B-row quanta at the carried (run-slot, cursor) position.  A
+    run closes when the open partition drains (host semantics) or when
+    its slot is within one quantum of capacity (the device buffer's
+    close-early rule — always legal, runs only need to be sorted)."""
+    C = es.slot_rows
+    cap = es.table.capacity  # M + 2B
     arB = jnp.arange(B, dtype=jnp.int32)
-    arC = jnp.arange(cap, dtype=jnp.int32)
+    batch = sorted_ops.absorb(rows_to_state(ck, cp, widths=ws), backend=backend)
+    rt, nt = rg.rs_split_absorb(es.table, es.table2, es.frontier, batch,
+                                backend=backend)
+    es = dataclasses.replace(es, table=rt, table2=nt)
 
-    def close_fn(c):
+    def close_fn(s):
         # the open run is exhausted (or its slot is full): record its
         # length, then merge both partitions into a fresh open partition —
-        # with occ_r == 0 this is exactly the host's promote-next-table.
-        rt, nt, frontier, buf, lens, cursor, ridx, spilled = c
-        lens = lens.at[jnp.where(cursor > 0, ridx, R)].set(cursor, mode="drop")
-        ridx = ridx + (cursor > 0).astype(jnp.int32)
-        rt = jax.tree.map(
+        # with occupancy 0 this is exactly the host's promote-next-table.
+        lens = s.lens.at[jnp.where(s.cursor > 0, s.ridx, s.run_slots)].set(
+            s.cursor, mode="drop"
+        )
+        ridx = s.ridx + (s.cursor > 0).astype(jnp.int32)
+        merged = jax.tree.map(
             lambda x: x[:cap],
-            sorted_ops.merge_absorb(rt, nt, backend=backend, assume_unique=True),
+            sorted_ops.merge_absorb(s.table, s.table2, backend=backend,
+                                    assume_unique=True),
         )
-        return (rt, table0, jnp.zeros((), kd), buf, lens, jnp.int32(0), ridx, spilled)
-
-    def evict_fn(c):
-        rt, nt, frontier, buf, lens, cursor, ridx, spilled = c
-        evicted, rest, frontier, n_ev = rg.rs_evict_step(rt, B)
-        rows = cursor + arB
-        buf = jax.tree.map(
-            lambda d, s: d.at[ridx, rows].set(s, mode="drop"), buf, evicted
+        return dataclasses.replace(
+            s, table=merged, table2=empty_like(s.table2, cap),
+            frontier=jnp.zeros((), s.frontier.dtype), lens=lens,
+            cursor=jnp.int32(0), ridx=ridx,
         )
-        return (rest, nt, frontier, buf, lens, cursor + n_ev, ridx, spilled + n_ev)
 
-    def overflow_step(c):
-        rt = c[0]
-        cursor = c[5]
+    def evict_fn(s):
+        evicted, rest, frontier, n_ev = rg.rs_evict_step(s.table, B)
+        rows = s.cursor + arB
+        store = jax.tree.map(
+            lambda d, v: d.at[s.ridx, rows].set(v, mode="drop"), s.store,
+            evicted,
+        )
+        return dataclasses.replace(
+            s, table=rest, frontier=frontier, store=store,
+            cursor=s.cursor + n_ev, spilled=s.spilled + n_ev,
+        )
+
+    def overflow_step(s):
         return jax.lax.cond(
-            (rt.occupancy() == 0) | (cursor + B > C), close_fn, evict_fn, c
+            (s.table.occupancy() == 0) | (s.cursor + B > C), close_fn,
+            evict_fn, s,
         )
 
-    def overflow_cond(c):
-        rt, nt = c[0], c[1]
-        return rt.occupancy() + nt.occupancy() > M
+    def overflow_cond(s):
+        return s.table.occupancy() + s.table2.occupancy() > M
 
-    def body(carry, xs):
-        rt, nt, frontier, buf, lens, cursor, ridx, spilled = carry
-        ck, cp = xs
-        batch = sorted_ops.absorb(rows_to_state(ck, cp, widths=ws), backend=backend)
-        rt, nt = rg.rs_split_absorb(rt, nt, frontier, batch, backend=backend)
-        carry = jax.lax.while_loop(
-            overflow_cond, overflow_step,
-            (rt, nt, frontier, buf, lens, cursor, ridx, spilled),
+    return jax.lax.while_loop(overflow_cond, overflow_step, es)
+
+
+def _engine_step(es: StreamEngineState, ck, cp, *, policy: str, M: int,
+                 B: int, backend: str, ws) -> StreamEngineState:
+    """Advance the engine by one input batch (the ``lax.scan`` body)."""
+    if policy in ("traditional", "inrun_dedup"):
+        return _step_sortwrite(es, ck, cp, dedup=(policy == "inrun_dedup"),
+                               backend=backend, ws=ws)
+    if policy == "early_agg":
+        return _step_early_agg(es, ck, cp, M=M, backend=backend, ws=ws)
+    if policy == "rs":
+        return _step_rs(es, ck, cp, M=M, B=B, backend=backend, ws=ws)
+    raise ValueError(f"unknown run-generation policy {policy!r}")
+
+
+def _engine_finish(es: StreamEngineState, *, policy: str, backend: str):
+    """Drain the engine: flush resident tables into run slots.
+
+    Returns ``(store, lens, table, spilled, nruns, overflow)`` — the
+    inputs of the merge phase.  For ``early_agg`` the resident table is
+    mirrored into the next slot so a downstream wide merge always
+    consumes the complete picture; it counts as a spilled run only when
+    earlier slots spilled (host-reference semantics).  For ``rs`` the
+    open run finishes with the open partition's remainder (its own slot
+    when there is room, the next slot otherwise), then the next-run
+    partition is written as the last run."""
+    R, C = es.run_slots, es.slot_rows
+    if policy in ("traditional", "inrun_dedup"):
+        return es.store, es.lens, es.table, es.spilled, es.ridx, es.ridx > R
+    if policy == "early_agg":
+        occ_t = es.table.occupancy()
+        store = jax.tree.map(
+            lambda d, s: d.at[es.ridx].set(s, mode="drop"), es.store,
+            _pad_rows(es.table, C),
         )
-        return carry, None
-
-    init = (
-        table0, table0, jnp.zeros((), kd), buf0, lens0,
-        jnp.int32(0), jnp.int32(0), jnp.int32(0),
-    )
-    (rt, nt, frontier, buf, lens, cursor, ridx, spilled), _ = jax.lax.scan(
-        body, init, (bk, bp)
-    )
-
-    # drain: finish the open run with the open partition's remainder (its
-    # own slot when there is room, the next slot otherwise), then write
-    # the next-run partition as the last run.
+        lens = es.lens.at[es.ridx].set(occ_t, mode="drop")
+        spilled = es.spilled + jnp.where(es.ridx > 0, occ_t, 0)
+        nruns = es.ridx + ((es.ridx > 0) & (occ_t > 0)).astype(jnp.int32)
+        overflow = es.ridx + 1 > R
+        return (store, lens, es.table, jnp.where(es.ridx > 0, spilled, 0),
+                nruns, overflow)
+    # rs drain
+    rt, nt = es.table, es.table2
     occ_r = rt.occupancy()
     occ_n = nt.occupancy()
-    evicted_any = (ridx > 0) | (cursor > 0)
+    cursor = es.cursor
+    evicted_any = (es.ridx > 0) | (cursor > 0)
+    arC = jnp.arange(rt.capacity, dtype=jnp.int32)
 
     def drain_append(args):
         buf, lens, ridx = args
@@ -297,12 +360,13 @@ def _rungen_rs(bk, bp, *, M: int, B: int, R: int, C: int, backend: str, widths):
         return buf, lens, ridx + (occ_r > 0).astype(jnp.int32)
 
     buf, lens, ridx = jax.lax.cond(
-        cursor + occ_r <= C, drain_append, drain_split, (buf, lens, ridx)
+        cursor + occ_r <= C, drain_append, drain_split,
+        (es.store, es.lens, es.ridx),
     )
     buf = jax.tree.map(lambda d, s: d.at[ridx, arC].set(s, mode="drop"), buf, nt)
     lens = lens.at[jnp.where(occ_n > 0, ridx, R)].set(occ_n, mode="drop")
     ridx = ridx + (occ_n > 0).astype(jnp.int32)
-    spilled = spilled + occ_r + occ_n
+    spilled = es.spilled + occ_r + occ_n
     nruns = jnp.where(evicted_any, ridx, 0)
     overflow = ridx > R
     return buf, lens, rt, jnp.where(evicted_any, spilled, 0), nruns, overflow
@@ -320,14 +384,19 @@ def _slots_for(n_pad: int, M: int, extra: int) -> int:
     return n_pad // (M + 1) + extra
 
 
+def _stream_run_slots(policy: str, n_pad: int, M: int) -> int:
+    """Run-slot bound from the padded row count alone — the host can size
+    (and grow) the store with zero device readbacks."""
+    if policy in ("traditional", "inrun_dedup"):
+        return max(1, n_pad // M)  # one run per M-row batch
+    return _slots_for(n_pad, M, 2 if policy == "early_agg" else 4)
+
+
 def _static_run_slots(policy: str, n: int, M: int, B: int) -> int:
     """Run-slot bound from shapes alone (host-side twin of the sizing in
-    :func:`_pipeline_jit`, used to plan pre-merge levels statically)."""
+    :func:`_pipeline_body`, used to plan pre-merge levels statically)."""
     chunk = M if policy in ("traditional", "inrun_dedup") else B
-    t = _num_batches(n, chunk)
-    if policy in ("traditional", "inrun_dedup"):
-        return t
-    return _slots_for(t * chunk, M, 2 if policy == "early_agg" else 4)
+    return _stream_run_slots(policy, _num_batches(n, chunk) * chunk, M)
 
 
 def _pad_slots(store: AggState, lens, R_new: int):
@@ -385,76 +454,19 @@ def _device_premerge(store: AggState, lens, *, fanin: int, levels: int, backend:
     return store, lens, spilled, steps, nlev
 
 
-def _pipeline_body(
-    keys,
-    payload,
-    *,
-    policy: str,
-    memory_rows: int,
-    batch_rows: int,
-    page_rows: int,
-    index_rows: int,
-    fanin: int,
-    premerge_levels: int,
-    backend: str,
-    widths,
-    merge: bool,
-):
-    """Traceable single-device pipeline: run generation scan → §4.3
-    pre-merge levels → wide merge.  Jitted directly as
-    :func:`_pipeline_jit`; the mesh-sharded program traces it once per
-    shard inside ``shard_map`` (:func:`_sharded_fn`)."""
-    M, B, P = memory_rows, batch_rows, page_rows
-    chunk = M if policy in ("traditional", "inrun_dedup") else B
-    t = _num_batches(keys.shape[0], chunk)
-    n_pad = t * chunk
-    bk, bp = _batch(keys, payload, chunk, t)
-    if policy in ("traditional", "inrun_dedup"):
-        store, lens, table, spilled, nruns, overflow = _rungen_sortwrite(
-            bk, bp, dedup=(policy == "inrun_dedup"), C=_round_up(M, P),
-            backend=backend, widths=widths,
-        )
-    elif policy == "early_agg":
-        store, lens, table, spilled, nruns, overflow = _rungen_early_agg(
-            bk, bp, M=M, R=_slots_for(n_pad, M, 2), C=_round_up(M + B, P),
-            backend=backend, widths=widths,
-        )
-    elif policy == "rs":
-        store, lens, table, spilled, nruns, overflow = _rungen_rs(
-            bk, bp, M=M, B=B, R=_slots_for(n_pad, M, 4),
-            C=_round_up(2 * M + 2 * B, P), backend=backend, widths=widths,
-        )
-    else:
-        raise ValueError(f"unknown run-generation policy {policy!r}")
-
+def _merge_phase(store, lens, spilled, nruns, overflow, *, page_rows: int,
+                 index_rows: int, fanin: int, premerge_levels: int,
+                 backend: str, out_capacity: int):
+    """§4.3 pre-merge levels + the wide merge + stats assembly — shared
+    by the one-shot program and the streamed finalize."""
     zero = jnp.int32(0)
-    rg_stats = DeviceSpillStats(
-        rows_spilled_run_generation=spilled,
-        rows_spilled_merge=zero,
-        runs_generated=nruns,
-        merge_steps=zero,
-        merge_levels=zero,
-        pages_read=zero,
-        rows_emitted=zero,
-        index_overflowed=jnp.bool_(False),
-        max_index_occupancy=zero,
-        run_buffer_overflowed=overflow,
-        merge_dropped_rows=jnp.bool_(False),
-        rows_exchanged=zero,
-    )
-    if not merge:
-        return store, lens, table, rg_stats
-
-    # §4.3: statically planned pre-wide traditional merge levels keep the
-    # number of runs entering the wide merge small enough for its index to
-    # fit the memory allocation (deep-merge regime, O/M > F).
     store, lens, spill_m, msteps, mlevels = _device_premerge(
         store, lens, fanin=fanin, levels=premerge_levels, backend=backend
     )
     out, out_cur, pages_read, max_occ, ix_overflow, dropped = (
         merge_mod.wide_merge_device(
-            store, lens, page_rows=P, index_rows=index_rows,
-            out_capacity=max(n_pad, 1), backend=backend,
+            store, lens, page_rows=page_rows, index_rows=index_rows,
+            out_capacity=out_capacity, backend=backend,
         )
     )
     # merge/emission stats are charged only when run generation actually
@@ -477,6 +489,72 @@ def _pipeline_body(
         rows_exchanged=zero,
     )
     return out, stats
+
+
+def _pipeline_body(
+    keys,
+    payload,
+    *,
+    policy: str,
+    memory_rows: int,
+    batch_rows: int,
+    page_rows: int,
+    index_rows: int,
+    fanin: int,
+    premerge_levels: int,
+    backend: str,
+    widths,
+    merge: bool,
+):
+    """Traceable single-device pipeline: run generation scan → §4.3
+    pre-merge levels → wide merge.  Jitted directly as
+    :func:`_pipeline_jit`; the mesh-sharded program traces it once per
+    shard inside ``shard_map`` (:func:`_sharded_fn`)."""
+    TRACE_LOG.append(("pipeline", policy, int(keys.shape[0]), merge))
+    M, B, P = memory_rows, batch_rows, page_rows
+    chunk, _, _, _ = _engine_geometry(policy, M, B, P)
+    t = _num_batches(keys.shape[0], chunk)
+    n_pad = t * chunk
+    bk, bp = _batch(keys, payload, chunk, t)
+    width = 0 if payload is None else payload.shape[-1]
+    ws = widths if widths is not None else (width, width, width)
+    R = _stream_run_slots(policy, n_pad, M)
+    es = _engine_init(policy, M=M, B=B, P=P, R=R, width=width,
+                      key_dtype=keys.dtype, widths=ws)
+
+    def body(carry, xs):
+        ck, cp = xs
+        return _engine_step(carry, ck, cp, policy=policy, M=M, B=B,
+                            backend=backend, ws=ws), None
+
+    es, _ = jax.lax.scan(body, es, (bk, bp))
+    store, lens, table, spilled, nruns, overflow = _engine_finish(
+        es, policy=policy, backend=backend
+    )
+
+    if not merge:
+        zero = jnp.int32(0)
+        rg_stats = DeviceSpillStats(
+            rows_spilled_run_generation=spilled,
+            rows_spilled_merge=zero,
+            runs_generated=nruns,
+            merge_steps=zero,
+            merge_levels=zero,
+            pages_read=zero,
+            rows_emitted=zero,
+            index_overflowed=jnp.bool_(False),
+            max_index_occupancy=zero,
+            run_buffer_overflowed=overflow,
+            merge_dropped_rows=jnp.bool_(False),
+            rows_exchanged=zero,
+        )
+        return store, lens, table, rg_stats
+
+    return _merge_phase(
+        store, lens, spilled, nruns, overflow, page_rows=P,
+        index_rows=index_rows, fanin=fanin, premerge_levels=premerge_levels,
+        backend=backend, out_capacity=max(n_pad, 1),
+    )
 
 
 _pipeline_jit = functools.partial(
@@ -558,12 +636,8 @@ def _sharded_fn(
             premerge_levels=premerge_levels, backend=backend,
             widths=widths, merge=True,
         )
-        quota = out.capacity  # a peer can at most send its whole output
-        recv, sent, send_dropped = gb_mod.exchange_sorted_fragments(
-            out, axis, world, quota=quota
-        )
-        merged = gb_mod.merge_received_fragments(
-            recv, world, quota, backend=backend
+        merged, sent, send_dropped = gb_mod.exchange_and_merge(
+            out, axis, world, backend=backend
         )
         dstats = dataclasses.replace(
             dstats,
@@ -615,6 +689,31 @@ def _canon_inputs(keys, payload):
     return keys, payload
 
 
+def _host_pad_for_geometry(keys, payload, policy: str, cfg: ExecConfig):
+    """Pad HOST (NumPy) inputs to the pow2-bucketed batch geometry before
+    the jit boundary, so the jit cache keys on geometry rather than N —
+    a second call with a different N in the same bucket reuses the
+    compiled program.  Device-resident (jax.Array) inputs pass through
+    and pad inside the jit instead (no host round trip, at the cost of a
+    per-N trace)."""
+    if isinstance(keys, jax.Array) or isinstance(payload, jax.Array):
+        return keys, payload
+    chunk, _, _, _ = _engine_geometry(policy, cfg.memory_rows,
+                                      cfg.batch_rows, cfg.page_rows)
+    n = keys.shape[0]
+    n_pad = _num_batches(n, chunk) * chunk
+    if n_pad == n:
+        return keys, payload
+    keys = np.concatenate(
+        [keys, np.full(n_pad - n, empty_key(keys.dtype), keys.dtype)]
+    )
+    if payload is not None:
+        payload = np.concatenate(
+            [payload, np.zeros((n_pad - n,) + payload.shape[1:], payload.dtype)]
+        )
+    return keys, payload
+
+
 def generate_runs_device(
     keys,
     payload=None,
@@ -639,6 +738,7 @@ def generate_runs_device(
     keys, payload = _canon_inputs(keys, payload)
     if payload is None:
         widths = (0, 0, 0) if widths is None else widths
+    keys, payload = _host_pad_for_geometry(keys, payload, policy, cfg)
     with key_dtype_context(np.dtype(keys.dtype)):
         return _pipeline_jit(
             as_key_array(keys), payload, policy=policy,
@@ -709,6 +809,7 @@ def aggregate_device(
         r_static = _static_run_slots(policy, keys.shape[0], cfg.memory_rows,
                                      cfg.batch_rows)
         pre = plan_pre_merge_levels(est, cfg, r_static)
+        keys, payload = _host_pad_for_geometry(keys, payload, policy, cfg)
         with key_dtype_context(np.dtype(keys.dtype)):
             return _pipeline_jit(
                 as_key_array(keys), payload, policy=policy,
@@ -760,3 +861,686 @@ def insort_aggregate_device(
         mesh=mesh, mesh_axis=mesh_axis,
     )
     return state, dstats.finalize()
+
+
+# ---------------------------------------------------------------------------
+# streamed pipeline: double-buffered super-batches over the same engine
+# ---------------------------------------------------------------------------
+#
+# The jitted pieces below advance / grow / finalize a StreamEngineState.
+# All three donate the incoming state (argnum 0): XLA reuses its buffers
+# for the output, so the steady-state device footprint is ONE engine
+# state plus the (at most two) staged input chunks in flight.
+
+
+def _absorb_chunk_body(es, bk, bp, *, policy, memory_rows, batch_rows,
+                       backend, widths, local_slots):
+    TRACE_LOG.append(("absorb", policy, tuple(bk.shape), es.run_slots))
+    # The scan carries only a LOCAL window of the run store — the slots
+    # this chunk can actually reach (its exact run bound + the open
+    # slot), spliced back in one dynamic_update_slice.  Carrying the full
+    # store would make every scan step pay O(R) for the carry, i.e. each
+    # absorb would slow down as the stream grows; with the window the
+    # per-chunk cost is independent of how much has already streamed.
+    # The host grow schedule guarantees R >= ridx + local_slots, so the
+    # clamp below never actually moves the window over occupied slots.
+    R, L = es.run_slots, min(local_slots, es.run_slots)
+    ridx0 = jnp.clip(es.ridx, 0, R - L)
+    loc = dataclasses.replace(
+        es,
+        store=jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, ridx0, L, axis=0),
+            es.store),
+        lens=jax.lax.dynamic_slice_in_dim(es.lens, ridx0, L, axis=0),
+        ridx=es.ridx - ridx0,
+    )
+
+    def body(carry, xs):
+        ck, cp = xs
+        return _engine_step(carry, ck, cp, policy=policy, M=memory_rows,
+                            B=batch_rows, backend=backend, ws=widths), None
+
+    loc, _ = jax.lax.scan(body, loc, (bk, bp))
+    return dataclasses.replace(
+        loc,
+        store=jax.tree.map(
+            lambda a, l: jax.lax.dynamic_update_slice_in_dim(
+                a, l, ridx0, axis=0),
+            es.store, loc.store),
+        lens=jax.lax.dynamic_update_slice_in_dim(es.lens, loc.lens, ridx0,
+                                                 axis=0),
+        ridx=ridx0 + loc.ridx,
+    )
+
+
+_absorb_chunk = jax.jit(
+    _absorb_chunk_body, donate_argnums=(0,),
+    static_argnames=("policy", "memory_rows", "batch_rows", "backend",
+                     "widths", "local_slots"),
+)
+
+
+def _engine_init_body(*, policy, memory_rows, batch_rows, page_rows,
+                      run_slots, width, key_dtype, widths):
+    TRACE_LOG.append(("init", policy, run_slots))
+    return _engine_init(
+        policy, M=memory_rows, B=batch_rows, P=page_rows, R=run_slots,
+        width=width, key_dtype=key_dtype, widths=widths,
+    )
+
+
+# every argument is static: the jit exists so the state is BORN on device
+# (no eager host constants — streaming works under a transfer guard)
+_engine_init_jit = jax.jit(
+    _engine_init_body,
+    static_argnames=("policy", "memory_rows", "batch_rows", "page_rows",
+                     "run_slots", "width", "key_dtype", "widths"),
+)
+
+
+def _grow_store_body(es, *, run_slots):
+    TRACE_LOG.append(("grow", run_slots))
+    store, lens = _pad_slots(es.store, es.lens, run_slots)
+    return dataclasses.replace(es, store=store, lens=lens)
+
+
+# no donation: the grown store's shapes differ from the old state's, so
+# XLA could not reuse the buffers anyway (it would only warn)
+_grow_store = jax.jit(_grow_store_body, static_argnames=("run_slots",))
+
+
+def _trim_slots(es, trim: int):
+    """Drop the run slots past the exact bound: the pow2 growth schedule
+    overshoots so absorbs stay cache hits, but by finalize the total row
+    count is host-known and runs can only occupy the first ``trim``
+    slots — merging the (empty) overshoot would cost real merge work."""
+    if trim >= es.store.keys.shape[0]:
+        return es
+    store = jax.tree.map(lambda a: a[:trim], es.store)
+    return dataclasses.replace(es, store=store, lens=es.lens[:trim])
+
+
+def _finalize_stream_body(es, *, policy, page_rows, index_rows, fanin,
+                          premerge_levels, backend, out_capacity, trim):
+    TRACE_LOG.append(("finalize", policy, out_capacity))
+    es = _trim_slots(es, trim)
+    store, lens, table, spilled, nruns, overflow = _engine_finish(
+        es, policy=policy, backend=backend
+    )
+    return _merge_phase(
+        store, lens, spilled, nruns, overflow, page_rows=page_rows,
+        index_rows=index_rows, fanin=fanin, premerge_levels=premerge_levels,
+        backend=backend, out_capacity=out_capacity,
+    )
+
+
+# no donation: the merged output's shapes differ from the engine state's
+# leaves, so the donated buffers would go unused (XLA warns, no benefit)
+_finalize_stream = jax.jit(
+    _finalize_stream_body,
+    static_argnames=("policy", "page_rows", "index_rows", "fanin",
+                     "premerge_levels", "backend", "out_capacity", "trim"),
+)
+
+
+@dataclasses.dataclass
+class StagedChunk:
+    """A super-batch already on device: ``jax.device_put`` was dispatched
+    (asynchronously) but the engine has not absorbed it yet — the unit of
+    double buffering."""
+
+    bk: jax.Array  # (t, chunk) batched keys, EMPTY-padded tail
+    bp: jax.Array  # (t, chunk, V) batched payload
+    rows: int  # valid input rows in this chunk
+    rows_padded: int  # t * chunk
+
+
+class StreamingAggregator:
+    """Feed the fused external-aggregation engine super-batch by
+    super-batch from the host.
+
+    The carry between chunks is a :class:`StreamEngineState` that never
+    leaves the device; absorbing a chunk is ONE jitted dispatch with the
+    previous state donated, and the host performs **zero** readbacks
+    until :meth:`finalize` (the single sync — same contract as the
+    one-shot :func:`aggregate_device`).
+
+    Typical use is through :func:`aggregate_device_stream`, which adds
+    the double-buffered drive loop; the raw protocol is::
+
+        agg = StreamingAggregator(cfg, policy="rs", key_dtype=np.uint32,
+                                  width=V)
+        staged = agg.stage(keys0, pay0)     # async H2D of chunk 0
+        for keys, pay in chunks:
+            nxt = agg.stage(keys, pay)      # H2D of k+1 in flight while…
+            agg.absorb_staged(staged)       # …the device absorbs chunk k
+            staged = nxt
+        agg.absorb_staged(staged)
+        state, stats = agg.finalize()
+
+    Sizing is host-computed from the cumulative padded row count (every
+    flushed run holds > M rows, so slots are bounded by input over
+    memory): the run store grows geometrically (pow2 slot counts) with a
+    jitted, donated concat — never a readback.  Chunk geometry is
+    pow2-bucketed, so the number of distinct compiled programs is
+    O(log max-chunk-rows + log total-rows), independent of chunk count.
+
+    ``mesh`` streams per-shard slices of every chunk through the same
+    engine under ``shard_map``; finalize then runs the key-range exchange
+    + per-owner merge of the one-shot sharded pipeline, returning a
+    globally (owner, key)-sorted state and cross-shard-reduced stats.
+    """
+
+    def __init__(
+        self,
+        cfg: ExecConfig | None = None,
+        *,
+        policy: str = "rs",
+        key_dtype=np.uint32,
+        width: int = 0,
+        widths: tuple[int, int, int] | None = None,
+        backend: str = "auto",
+        index_rows: int | None = None,
+        output_estimate: int | None = None,
+        output_rows: int | None = None,
+        mesh=None,
+        mesh_axis: str | None = None,
+    ):
+        cfg = cfg or ExecConfig()
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; expected one of {POLICIES}"
+            )
+        self.cfg = cfg
+        self.policy = policy
+        self.backend = dispatch.resolve_backend_name(backend)
+        self.key_dtype = np.dtype(key_dtype)
+        if self.key_dtype not in (np.dtype(np.uint32), np.dtype(np.uint64)):
+            raise TypeError(
+                f"key_dtype must be uint32 or uint64, got {self.key_dtype}"
+            )
+        self.width = int(width)
+        self.widths = (tuple(widths) if widths is not None
+                       else (self.width,) * 3)
+        self.index_rows = index_rows or cfg.memory_rows
+        self.output_estimate = output_estimate
+        self.output_rows = output_rows
+        self._chunk = _engine_geometry(policy, cfg.memory_rows,
+                                       cfg.batch_rows, cfg.page_rows)[0]
+        self.mesh = mesh
+        self.axis = (resolve_mesh_axis(mesh, mesh_axis)
+                     if mesh is not None else None)
+        self.world = int(mesh.shape[self.axis]) if mesh is not None else 1
+        if mesh is not None:
+            dispatch.check_shardable(self.backend)
+            self._fns = _mesh_stream_fns(
+                mesh, self.axis, policy=policy,
+                memory_rows=cfg.memory_rows, batch_rows=cfg.batch_rows,
+                page_rows=cfg.page_rows, index_rows=self.index_rows,
+                fanin=cfg.fanin, backend=self.backend, widths=self.widths,
+                width=self.width, key_dtype_name=self.key_dtype.name,
+            )
+        self._es: StreamEngineState | None = None
+        self._R = 0  # per-shard run slots currently allocated
+        self._finalized = False
+        self.rows_seen = 0
+        self.rows_padded = 0  # cumulative padded rows (all shards)
+
+    # -- staging ---------------------------------------------------------
+
+    def _prep(self, keys, payload):
+        """Host-side canonicalize + pad one chunk to its pow2-bucketed
+        batch geometry (NumPy only — under a transfer guard the explicit
+        ``device_put`` in :meth:`stage` is the sole device touch)."""
+        keys = rg._np_keys(np.asarray(keys))
+        if keys.dtype != self.key_dtype:
+            raise TypeError(
+                f"chunk key dtype {keys.dtype} != aggregator key_dtype "
+                f"{self.key_dtype}"
+            )
+        n = keys.shape[0]
+        if payload is None:
+            payload = np.zeros((n, self.width), np.float32)
+        else:
+            payload = np.asarray(payload, dtype=np.float32)
+            if payload.ndim == 1:
+                payload = payload[:, None]
+        if payload.shape != (n, self.width):
+            raise ValueError(
+                f"chunk payload shape {payload.shape} != "
+                f"({n}, width={self.width})"
+            )
+        n_loc = -(-n // self.world)
+        t = _num_batches(n_loc, self._chunk)
+        n_pad = self.world * t * self._chunk
+        if n_pad > n:
+            keys = np.concatenate([
+                keys,
+                np.full(n_pad - n, empty_key(self.key_dtype), self.key_dtype),
+            ])
+            payload = np.concatenate([
+                payload, np.zeros((n_pad - n, self.width), np.float32),
+            ])
+        bk = keys.reshape(self.world * t, self._chunk)
+        bp = payload.reshape(self.world * t, self._chunk, self.width)
+        return bk, bp, n, n_pad
+
+    def stage(self, keys, payload=None) -> StagedChunk | None:
+        """Start the (asynchronous) host→device transfer of one chunk.
+
+        Returns a :class:`StagedChunk` to pass to :meth:`absorb_staged`
+        later — staging chunk k+1 before absorbing chunk k is what hides
+        the transfer behind compute.  Empty chunks return None."""
+        if np.asarray(keys).shape[0] == 0:
+            return None
+        bk, bp, n, n_pad = self._prep(keys, payload)
+        with key_dtype_context(self.key_dtype):
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+
+                bk = jax.device_put(bk, NamedSharding(self.mesh, P(self.axis)))
+                bp = jax.device_put(bp, NamedSharding(self.mesh, P(self.axis)))
+            else:
+                bk, bp = jax.device_put((bk, bp))
+        return StagedChunk(bk=bk, bp=bp, rows=n, rows_padded=n_pad)
+
+    # -- absorbing -------------------------------------------------------
+
+    def _bound(self, rows_padded: int) -> int:
+        return _stream_run_slots(self.policy, rows_padded // self.world,
+                                 self.cfg.memory_rows)
+
+    def _local_slots(self, chunk_padded: int) -> int:
+        """Run slots one chunk can reach: its exact bound + the open slot
+        (the absorb scan carries only this window of the store)."""
+        return self._bound(chunk_padded) + 1
+
+    def _slots_needed(self, rows_padded_total: int, chunk_padded: int) -> int:
+        # the store must cover the cumulative bound AND the local window
+        # the next absorb splices at the current high-water mark (the
+        # dynamic_update_slice must never clamp over occupied slots)
+        prev = rows_padded_total - chunk_padded
+        return _pow2_ceil(max(
+            self._bound(rows_padded_total),
+            self._bound(prev) + self._local_slots(chunk_padded),
+        ))
+
+    def absorb_staged(self, staged: StagedChunk | None) -> None:
+        """Absorb a previously staged chunk: one jitted scan dispatch, the
+        engine state donated — no host synchronization."""
+        if staged is None:
+            return
+        if self._finalized:
+            raise RuntimeError("StreamingAggregator already finalized")
+        needed = self._slots_needed(self.rows_padded + staged.rows_padded,
+                                    staged.rows_padded)
+        local = self._local_slots(staged.rows_padded)
+        with key_dtype_context(self.key_dtype):
+            if self._es is None:
+                self._R = needed
+                if self.mesh is None:
+                    self._es = _engine_init_jit(
+                        policy=self.policy,
+                        memory_rows=self.cfg.memory_rows,
+                        batch_rows=self.cfg.batch_rows,
+                        page_rows=self.cfg.page_rows, run_slots=needed,
+                        width=self.width, key_dtype=self.key_dtype.name,
+                        widths=self.widths,
+                    )
+                else:
+                    self._es = self._fns.init(needed)()
+            elif needed > self._R:
+                self._R = needed
+                if self.mesh is None:
+                    self._es = _grow_store(self._es, run_slots=needed)
+                else:
+                    self._es = self._fns.grow(needed)(self._es)
+            if self.mesh is None:
+                self._es = _absorb_chunk(
+                    self._es, staged.bk, staged.bp, policy=self.policy,
+                    memory_rows=self.cfg.memory_rows,
+                    batch_rows=self.cfg.batch_rows, backend=self.backend,
+                    widths=self.widths, local_slots=local,
+                )
+            else:
+                self._es = self._fns.absorb(local)(
+                    self._es, staged.bk, staged.bp)
+        self.rows_seen += staged.rows
+        self.rows_padded += staged.rows_padded
+
+    def absorb(self, keys, payload=None) -> None:
+        """stage + absorb in one call (no overlap — prefer the staged
+        protocol or :func:`aggregate_device_stream` for throughput)."""
+        self.absorb_staged(self.stage(keys, payload))
+
+    # -- finalizing ------------------------------------------------------
+
+    def finalize_device(self) -> tuple[AggState, DeviceSpillStats]:
+        """Drain + pre-merge + wide merge (+ mesh exchange).  Returns
+        device values and performs NO host sync — the transfer-guard-safe
+        half of :meth:`finalize`.  Consumes (donates) the engine state."""
+        if self._finalized:
+            raise RuntimeError("StreamingAggregator already finalized")
+        self._finalized = True
+        if self._es is None:  # nothing absorbed: empty result
+            with key_dtype_context(self.key_dtype):
+                return (
+                    empty_state(0, self.width, key_dtype=self.key_dtype,
+                                widths=self.widths),
+                    DeviceSpillStats.zeros(),
+                )
+        from repro.core.insort import plan_pre_merge_levels  # lazy: cycle
+
+        est = (self.cfg.memory_rows * self.cfg.fanin
+               if self.output_estimate is None else self.output_estimate)
+        rows_loc = self.rows_padded // self.world
+        r_static = _stream_run_slots(self.policy, rows_loc,
+                                     self.cfg.memory_rows)
+        pre = plan_pre_merge_levels(est, self.cfg, r_static)
+        out_cap = max(1, self.output_rows or rows_loc)
+        trim = min(r_static, self._R)  # merge the exact bound, not pow2
+        es, self._es = self._es, None
+        with key_dtype_context(self.key_dtype):
+            if self.mesh is None:
+                return _finalize_stream(
+                    es, policy=self.policy, page_rows=self.cfg.page_rows,
+                    index_rows=self.index_rows, fanin=self.cfg.fanin,
+                    premerge_levels=pre, backend=self.backend,
+                    out_capacity=out_cap, trim=trim,
+                )
+            return self._fns.finalize(pre, out_cap, trim)(es)
+
+    def finalize(self) -> tuple[AggState, SpillStats]:
+        """:meth:`finalize_device` + the ONE host readback of spill stats
+        (raises loudly on run-buffer overflow / dropped merge rows)."""
+        state, dstats = self.finalize_device()
+        return state, dstats.finalize()
+
+
+def _as_chunk(c):
+    """Normalize one element of a chunk stream to ``(keys, payload)``."""
+    if isinstance(c, (tuple, list)):
+        if len(c) != 2:
+            raise ValueError(
+                "chunk must be a keys array or a (keys, payload) pair, got "
+                f"a {type(c).__name__} of length {len(c)}"
+            )
+        return c[0], c[1]
+    return c, None
+
+
+def rebatch_chunks(chunks, rows: int):
+    """Re-chunk an iterable of ``keys`` / ``(keys, payload)`` chunks into
+    ``rows``-row super-batches (host NumPy — the chunked source adapter
+    for arbitrary-granularity producers).  The final partial super-batch
+    is yielded as-is."""
+    if rows <= 0:
+        raise ValueError(f"rows must be positive, got {rows}")
+    kbuf: list[np.ndarray] = []
+    pbuf: list = []
+    have = 0
+    for c in chunks:
+        k, p = _as_chunk(c)
+        k = np.asarray(k)
+        if k.shape[0] == 0:
+            continue
+        kbuf.append(k)
+        pbuf.append(None if p is None else np.asarray(p))
+        have += k.shape[0]
+        while have >= rows:
+            keys = np.concatenate(kbuf) if len(kbuf) > 1 else kbuf[0]
+            if any(p is None for p in pbuf):
+                pay = None
+            else:
+                pb = [p[:, None] if p.ndim == 1 else p for p in pbuf]
+                pay = np.concatenate(pb) if len(pb) > 1 else pb[0]
+            yield keys[:rows], None if pay is None else pay[:rows]
+            kbuf = [keys[rows:]] if keys.shape[0] > rows else []
+            pbuf = [pay[rows:]] if (pay is not None and keys.shape[0] > rows) \
+                else ([None] * len(kbuf))
+            have -= rows
+    if have:
+        keys = np.concatenate(kbuf) if len(kbuf) > 1 else kbuf[0]
+        if any(p is None for p in pbuf):
+            pay = None
+        else:
+            pb = [p[:, None] if p.ndim == 1 else p for p in pbuf]
+            pay = np.concatenate(pb) if len(pb) > 1 else pb[0]
+        yield keys, pay
+
+
+def aggregate_device_stream(
+    chunks,
+    cfg: ExecConfig | None = None,
+    *,
+    policy: str = "rs",
+    backend: str = "auto",
+    widths: tuple[int, int, int] | None = None,
+    key_dtype=None,
+    width: int | None = None,
+    index_rows: int | None = None,
+    output_estimate: int | None = None,
+    output_rows: int | None = None,
+    super_batch_rows: int | None = None,
+    mesh=None,
+    mesh_axis: str | None = None,
+) -> tuple[AggState, DeviceSpillStats]:
+    """The streamed, double-buffered twin of :func:`aggregate_device`:
+    aggregate an input that never needs to be device- (or even host-)
+    resident at once.
+
+    ``chunks`` is an iterable/generator of ``keys`` arrays or
+    ``(keys, payload)`` pairs (host NumPy).  Each chunk is staged with an
+    explicit ``jax.device_put`` *before* the previous chunk's absorb is
+    dispatched, so the k+1 transfer overlaps the k compute (JAX async
+    dispatch); the device carries one engine state (donated between
+    steps) plus at most two staged chunks — the peak device footprint is
+    bounded by the super-batch size, not N.  ``super_batch_rows``
+    re-chunks the stream to that many rows per absorb (default: chunks
+    are absorbed as produced).
+
+    ``key_dtype`` / ``width`` pin the stream's schema; by default they
+    are inferred from the first chunk.  ``output_rows`` bounds the merge
+    output capacity (device bytes) when the unique-key count is known to
+    be far below the input size; an under-estimate is flagged loudly via
+    ``merge_dropped_rows`` — never a silent truncation.
+
+    Returns ``(state, DeviceSpillStats)`` with zero host syncs performed;
+    see :func:`insort_aggregate_device_stream` for the finalized-stats
+    variant.  Exact parity: for any chunking whose chunk sizes are
+    multiples of the engine's input batch (``memory_rows`` for the
+    read-sort-write policies, ``batch_rows`` for early-agg/RS), the
+    result state AND SpillStats are identical to the one-shot pipeline
+    on the concatenated input — EMPTY-padded batches are no-ops in every
+    policy.
+    """
+    cfg = cfg or ExecConfig()
+    it = iter(chunks)
+    first = None
+    for c in it:
+        k, p = _as_chunk(c)
+        if np.asarray(k).shape[0]:
+            first = (np.asarray(k), p)
+            break
+    if first is None:  # empty stream: mirror the one-shot empty early-out
+        kd = np.dtype(key_dtype or np.uint32)
+        w = int(width or 0)
+        with key_dtype_context(kd):
+            return (
+                empty_state(0, w, key_dtype=kd, widths=widths),
+                DeviceSpillStats.zeros(),
+            )
+    if key_dtype is None:
+        key_dtype = rg._np_keys(first[0]).dtype
+    if width is None:
+        if first[1] is None:
+            width = 0
+        else:
+            p0 = np.asarray(first[1])
+            width = 1 if p0.ndim == 1 else p0.shape[1]
+    stream = itertools.chain([first], (_as_chunk(c) for c in it))
+    if super_batch_rows:
+        stream = rebatch_chunks(stream, super_batch_rows)
+    agg = StreamingAggregator(
+        cfg, policy=policy, key_dtype=key_dtype, width=width, widths=widths,
+        backend=backend, index_rows=index_rows,
+        output_estimate=output_estimate, output_rows=output_rows,
+        mesh=mesh, mesh_axis=mesh_axis,
+    )
+    staged = None
+    for keys, payload in stream:
+        nxt = agg.stage(keys, payload)  # H2D of k+1 in flight while …
+        if staged is not None:
+            agg.absorb_staged(staged)  # … the device absorbs chunk k
+        staged = nxt
+    agg.absorb_staged(staged)
+    return agg.finalize_device()
+
+
+def insort_aggregate_device_stream(
+    chunks, cfg: ExecConfig | None = None, **kw
+) -> tuple[AggState, SpillStats]:
+    """:func:`aggregate_device_stream` + the one host readback of spill
+    stats — the streamed twin of :func:`insort_aggregate_device`."""
+    state, dstats = aggregate_device_stream(chunks, cfg, **kw)
+    return state, dstats.finalize()
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded streaming: the same engine under shard_map
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_stream_fns(
+    mesh,
+    axis: str,
+    *,
+    policy: str,
+    memory_rows: int,
+    batch_rows: int,
+    page_rows: int,
+    index_rows: int,
+    fanin: int,
+    backend: str,
+    widths,
+    width: int,
+    key_dtype_name: str,
+):
+    """Jitted shard_map programs advancing a PER-SHARD engine state:
+    ``init(R)()``, ``absorb(es, bk, bp)``, ``grow(R)(es)``, and
+    ``finalize(premerge_levels, out_capacity)(es)`` (per-shard drain +
+    merge, then the key-range exchange + per-owner merge of the sharded
+    one-shot pipeline).  Scalar engine leaves are carried (1,)-shaped so
+    every leaf has a shardable leading axis
+    (:func:`~repro.core.types.expand_engine_scalars`)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import groupby as gb_mod
+    from repro.distributed._compat import shard_map
+
+    kd = np.dtype(key_dtype_name)
+    world = mesh.shape[axis]
+    agg_spec = AggState(
+        keys=P(axis), count=P(axis), sum=P(axis, None),
+        min=P(axis, None), max=P(axis, None),
+    )
+    store_spec = AggState(
+        keys=P(axis, None), count=P(axis, None), sum=P(axis, None, None),
+        min=P(axis, None, None), max=P(axis, None, None),
+    )
+    state_spec = StreamEngineState(
+        table=agg_spec, table2=agg_spec, frontier=P(axis), store=store_spec,
+        lens=P(axis), cursor=P(axis), ridx=P(axis), spilled=P(axis),
+    )
+    n_stats = len(dataclasses.fields(DeviceSpillStats))
+
+    @functools.lru_cache(maxsize=None)
+    def init_fn(run_slots: int):
+        def body():
+            es = _engine_init(
+                policy, M=memory_rows, B=batch_rows, P=page_rows,
+                R=run_slots, width=width, key_dtype=kd, widths=widths,
+            )
+            return expand_engine_scalars(es)
+
+        return jax.jit(shard_map(
+            body, mesh=mesh, in_specs=(), out_specs=state_spec, check=False,
+        ))
+
+    @functools.lru_cache(maxsize=None)
+    def absorb_fn(local_slots: int):
+        def body(es, bk, bp):
+            es = _absorb_chunk_body(
+                squeeze_engine_scalars(es), bk, bp, policy=policy,
+                memory_rows=memory_rows, batch_rows=batch_rows,
+                backend=backend, widths=widths, local_slots=local_slots,
+            )
+            return expand_engine_scalars(es)
+
+        return jax.jit(
+            shard_map(
+                body, mesh=mesh,
+                in_specs=(state_spec, P(axis, None), P(axis, None, None)),
+                out_specs=state_spec, check=False,
+            ),
+            donate_argnums=(0,),
+        )
+
+    @functools.lru_cache(maxsize=None)
+    def grow_fn(run_slots: int):
+        def body(es):
+            es = squeeze_engine_scalars(es)
+            store, lens = _pad_slots(es.store, es.lens, run_slots)
+            return expand_engine_scalars(
+                dataclasses.replace(es, store=store, lens=lens)
+            )
+
+        # no donation: shapes change across the grow
+        return jax.jit(
+            shard_map(body, mesh=mesh, in_specs=(state_spec,),
+                      out_specs=state_spec, check=False),
+        )
+
+    @functools.lru_cache(maxsize=None)
+    def finalize_fn(premerge_levels: int, out_capacity: int, trim: int):
+        def body(es):
+            es = _trim_slots(squeeze_engine_scalars(es), trim)
+            store, lens, table, spilled, nruns, overflow = _engine_finish(
+                es, policy=policy, backend=backend
+            )
+            out, dstats = _merge_phase(
+                store, lens, spilled, nruns, overflow, page_rows=page_rows,
+                index_rows=index_rows, fanin=fanin,
+                premerge_levels=premerge_levels, backend=backend,
+                out_capacity=out_capacity,
+            )
+            merged, sent, send_dropped = gb_mod.exchange_and_merge(
+                out, axis, world, backend=backend
+            )
+            dstats = dataclasses.replace(
+                dstats,
+                merge_dropped_rows=dstats.merge_dropped_rows | send_dropped,
+                rows_exchanged=sent,
+            )
+            return merged, dstats.cross_shard(axis)
+
+        # no donation: outputs don't share the state leaves' shapes
+        return jax.jit(
+            shard_map(
+                body, mesh=mesh, in_specs=(state_spec,),
+                out_specs=(agg_spec, DeviceSpillStats(*(P(),) * n_stats)),
+                check=False,
+            ),
+        )
+
+    class _Fns:
+        pass
+
+    fns = _Fns()
+    fns.init = init_fn
+    fns.absorb = absorb_fn
+    fns.grow = grow_fn
+    fns.finalize = finalize_fn
+    return fns

@@ -36,6 +36,8 @@ kernels compare them as a (hi, lo) pair of uint32 lanes — no native
 from __future__ import annotations
 
 import dataclasses
+import itertools
+from collections.abc import Iterator
 from typing import Any, Mapping, Sequence
 
 import jax.numpy as jnp
@@ -375,6 +377,18 @@ def aggregate(
     names) asserts the result must be key-sorted — free for the
     sort-based algorithms, an extra sort for the hash baselines.
 
+    **Streamed input**: ``columns`` may instead be a generator/iterator
+    of column-batch mappings (see
+    :func:`repro.data.pipeline.iter_column_batches`); the engine then
+    absorbs the input chunk by chunk through the double-buffered
+    streamed pipeline (:func:`repro.core.pipeline.
+    aggregate_device_stream`) — the input never needs to be resident at
+    once, and the device footprint is bounded by the chunk size.  In
+    this form ``values`` names a float column carried in each batch
+    mapping (a string), the algorithm is in-sort on the device pipeline
+    (the only external algorithm here — exactly the paper's point), and
+    everything else behaves identically.
+
     ``algorithm``: ``"auto"`` (the paper's systems-only choice: in-sort),
     ``"insort"``, ``"hash"``, ``"f1_hash"``, ``"sort_then_stream"``, or
     ``"inmemory"``.  ``backend``: ``"auto" | "xla" | "pallas"`` through
@@ -405,6 +419,13 @@ def aggregate(
         )
     if not isinstance(aggs, AggSpec):
         aggs = AggSpec(aggs) if isinstance(aggs, str) else AggSpec(*aggs)
+    if isinstance(columns, Iterator):
+        return _aggregate_stream(
+            columns, by=by, values=values, aggs=aggs, order_by=order_by,
+            algorithm=algorithm, backend=backend, cfg=cfg,
+            output_estimate=output_estimate, pipeline=pipeline,
+            mesh=mesh, mesh_axis=mesh_axis,
+        )
     packed = by.pack(columns)
     want_sorted = _resolve_order_by(order_by, by)
     if values is not None:
@@ -464,6 +485,113 @@ def aggregate(
             # hash order → key order: the extra sort the paper's operator
             # never pays (Fig 19)
             state = sorted_ops.sort_state(state, backend=backend)
+    return AggResult(state=state, stats=stats, by=by, aggs=aggs, plan=plan)
+
+
+def _aggregate_stream(
+    batches,
+    *,
+    by: KeySpec,
+    values,
+    aggs: AggSpec,
+    order_by,
+    algorithm: str,
+    backend: str,
+    cfg: ExecConfig,
+    output_estimate: int | None,
+    pipeline: str,
+    mesh,
+    mesh_axis: str | None,
+) -> AggResult:
+    """:func:`aggregate` over an iterator of column-batch mappings.
+
+    Each batch mapping carries the key columns named by ``by`` plus (when
+    ``values`` is a column name) one float value column.  Batches are
+    packed host-side one at a time and fed to the double-buffered
+    streamed device pipeline — host→device transfer of batch k+1 overlaps
+    the device aggregating batch k, and only the finalize syncs."""
+    if algorithm not in ("auto", "insort"):
+        raise ValueError(
+            f"streamed input runs the in-sort device pipeline only, got "
+            f"algorithm={algorithm!r}"
+        )
+    if pipeline != "device":
+        raise ValueError(
+            f"streamed input requires pipeline='device', got {pipeline!r}"
+        )
+    if values is not None and not isinstance(values, str):
+        raise TypeError(
+            "with streamed input, values must name a column carried in "
+            f"each batch mapping (a str), got {type(values).__name__}"
+        )
+    _resolve_order_by(order_by, by)  # sort-based: always satisfiable
+
+    backend = dispatch.resolve_backend_name(backend)
+    rows_seen = 0
+
+    def _prep(batch):
+        nonlocal rows_seen
+        packed = by.pack(batch)
+        rows_seen += len(packed)
+        if values is None:
+            return packed, None
+        if values not in batch:
+            raise KeyError(f"values column {values!r} missing from batch")
+        vals = np.asarray(batch[values], dtype=np.float32)
+        if vals.ndim == 1:
+            vals = vals[:, None]
+        if len(vals) != len(packed):
+            raise ValueError(
+                f"values column {values!r} has {len(vals)} rows, key "
+                f"columns have {len(packed)}"
+            )
+        return packed, vals
+
+    from repro.core import pipeline as pipeline_mod
+
+    # Peek one batch to fix the payload width (plane widths are static).
+    it = iter(batches)
+    first = next(it, None)
+    if first is None:
+        with key_dtype_context(by.key_dtype):
+            state, stats = pipeline_mod.insort_aggregate_device_stream(
+                iter(()), cfg, backend=backend, widths=(0, 0, 0), width=0,
+                key_dtype=by.key_dtype, output_estimate=output_estimate,
+                mesh=mesh, mesh_axis=mesh_axis,
+            )
+        plan = _plan(0, cfg, output_estimate)
+        plan.update(algorithm="insort", pipeline="device", backend=backend,
+                    streamed=True)
+        return AggResult(state=state, stats=stats, by=by, aggs=aggs, plan=plan)
+
+    first_prepped = _prep(first)
+    V = 0 if first_prepped[1] is None else first_prepped[1].shape[1]
+    widths = aggs.plane_widths(V)
+    if values is not None and not any(widths):
+        # nothing requested needs the payload — drop the value column
+        values = None
+        rows_seen = 0
+        first_prepped = _prep(first)
+        V, widths = 0, (0, 0, 0)
+    elif values is None and aggs.needs_payload():
+        raise ValueError(
+            f"aggregates {aggs.names} need a payload; pass values=<column "
+            "name>"
+        )
+
+    chunks = itertools.chain([first_prepped], (_prep(b) for b in it))
+    with key_dtype_context(by.key_dtype):
+        state, stats = pipeline_mod.insort_aggregate_device_stream(
+            chunks, cfg, backend=backend, widths=widths, width=V,
+            key_dtype=by.key_dtype, output_estimate=output_estimate,
+            mesh=mesh, mesh_axis=mesh_axis,
+        )
+    plan = _plan(rows_seen, cfg, output_estimate)
+    plan.update(algorithm="insort", pipeline="device", backend=backend,
+                streamed=True)
+    if mesh is not None:
+        axis = pipeline_mod.resolve_mesh_axis(mesh, mesh_axis)
+        plan["mesh"] = {"axis": axis, "world": int(mesh.shape[axis])}
     return AggResult(state=state, stats=stats, by=by, aggs=aggs, plan=plan)
 
 

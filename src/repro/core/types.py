@@ -237,6 +237,84 @@ def slice_rows(state: AggState, start, size: int) -> AggState:
     return jax.tree.map(f, state)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamEngineState:
+    """The device-resident carry of the external-aggregation scan, as an
+    explicit, reusable pytree.
+
+    The fused pipeline (:mod:`repro.core.pipeline`) advances this state
+    one input batch at a time; making the carry a first-class value is
+    what lets a host loop feed the engine **super-batches** (chunks of
+    the input stream) through a jitted ``absorb_chunk`` step, double-
+    buffering host→device transfer behind compute, instead of requiring
+    the whole input resident as one ``(T, B)`` stack.
+
+    Field usage varies by run-generation policy (unused tables carry
+    capacity 0 so the pytree structure stays uniform per policy):
+
+    ``table``     early-agg ordered in-memory index (capacity M), or the
+                  replacement-selection run partition (capacity M + 2B).
+    ``table2``    replacement selection's next-run partition.
+    ``frontier``  replacement selection's eviction frontier key (scalar).
+    ``store``     the stacked run buffer — leading dims ``(R, C)``:
+                  R page-aligned run slots of C rows each.
+    ``lens``      ``(R,)`` int32 per-slot run lengths.
+    ``cursor``    replacement selection's write cursor within the open
+                  run slot.
+    ``ridx``      the next free run slot.
+    ``spilled``   rows spilled by run generation so far.
+
+    All counters are device scalars: absorbing a chunk performs **zero**
+    host synchronizations, and the spill accounting becomes a
+    :class:`DeviceSpillStats` only at the single finalize readback.
+    """
+
+    table: AggState
+    table2: AggState
+    frontier: jax.Array
+    store: AggState
+    lens: jax.Array
+    cursor: jax.Array
+    ridx: jax.Array
+    spilled: jax.Array
+
+    @property
+    def run_slots(self) -> int:
+        """R — preallocated run slots in the stacked store."""
+        return self.lens.shape[-1]
+
+    @property
+    def slot_rows(self) -> int:
+        """C — page-aligned capacity of one run slot."""
+        return self.store.keys.shape[-1]
+
+    @property
+    def key_dtype(self) -> np.dtype:
+        return np.dtype(self.store.keys.dtype)
+
+
+# scalar leaves of StreamEngineState (everything else has a leading row or
+# slot dim).  The mesh-sharded stream keeps these as (1,)-shaped per-shard
+# arrays so every leaf can carry a sharded leading axis; these helpers
+# convert at the shard_map boundary.
+_SES_SCALARS = ("frontier", "cursor", "ridx", "spilled")
+
+
+def expand_engine_scalars(es: StreamEngineState) -> StreamEngineState:
+    """() scalar leaves → (1,) so each leaf has a shardable leading dim."""
+    return dataclasses.replace(
+        es, **{f: getattr(es, f)[None] for f in _SES_SCALARS}
+    )
+
+
+def squeeze_engine_scalars(es: StreamEngineState) -> StreamEngineState:
+    """(1,) scalar leaves → () (inverse of :func:`expand_engine_scalars`)."""
+    return dataclasses.replace(
+        es, **{f: getattr(es, f)[0] for f in _SES_SCALARS}
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecConfig:
     """External-algorithm knobs, mirroring the paper's experiment parameters.

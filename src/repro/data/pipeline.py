@@ -23,6 +23,65 @@ from repro.core import ExecConfig, distinct
 from repro.core.types import EMPTY
 
 
+def iter_column_batches(columns, rows: int):
+    """Split a column mapping into ``rows``-row batch mappings — the
+    chunked source adapter for the streamed ``repro.aggregate`` front
+    door (pass the resulting generator as ``columns``).
+
+    The engine never sees the whole table at once: each yielded batch is
+    packed, staged, and absorbed independently, so the device footprint
+    is bounded by ``rows`` regardless of the table's size."""
+    if rows <= 0:
+        raise ValueError(f"rows must be positive, got {rows}")
+    cols = {k: np.asarray(v) for k, v in columns.items()}
+    if not cols:
+        return
+    n = len(next(iter(cols.values())))
+    for k, v in cols.items():
+        if len(v) != n:
+            raise ValueError(
+                f"column {k!r} has {len(v)} rows, expected {n}"
+            )
+    for s in range(0, n, rows):
+        yield {k: v[s : s + rows] for k, v in cols.items()}
+
+
+def rebatch_columns(batches, rows: int):
+    """Re-chunk an iterable of column-batch mappings to ``rows``-row
+    batches (host NumPy).  Producers emit whatever granularity is natural
+    (log shards, parquet row groups, …); the engine wants super-batches
+    big enough to amortize dispatch — this adapter sits between them.
+    The final partial batch is yielded as-is."""
+    if rows <= 0:
+        raise ValueError(f"rows must be positive, got {rows}")
+    buf: dict[str, list[np.ndarray]] = {}
+    have = 0
+    for batch in batches:
+        batch = {k: np.asarray(v) for k, v in batch.items()}
+        if not batch:
+            continue
+        n = len(next(iter(batch.values())))
+        if n == 0:
+            continue
+        if buf and set(batch) != set(buf):
+            raise ValueError(
+                f"batch columns {sorted(batch)} != stream columns "
+                f"{sorted(buf)}"
+            )
+        for k, v in batch.items():
+            buf.setdefault(k, []).append(v)
+        have += n
+        while have >= rows:
+            cat = {k: np.concatenate(v) if len(v) > 1 else v[0]
+                   for k, v in buf.items()}
+            yield {k: v[:rows] for k, v in cat.items()}
+            buf = {k: [v[rows:]] for k, v in cat.items()}
+            have -= rows
+    if have:
+        yield {k: np.concatenate(v) if len(v) > 1 else v[0]
+               for k, v in buf.items()}
+
+
 @dataclasses.dataclass
 class SyntheticCorpus:
     """Deterministic synthetic corpus: duplicated zipf-ish documents."""

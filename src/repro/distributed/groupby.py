@@ -128,6 +128,25 @@ def exchange_sorted_fragments(st: AggState, axis: str, world: int, *, quota: int
     return recv, rows_sent, send_dropped
 
 
+def exchange_and_merge(st: AggState, axis: str, world: int, *,
+                       backend: str = "auto"):
+    """Key-range exchange + per-owner merge of a sorted, duplicate-free
+    local state — the shared tail of the mesh-sharded pipelines (one-shot
+    and streamed).  The per-peer quota is the full local capacity, so the
+    exchange can never cut live rows.
+
+    Returns ``(merged, rows_sent, send_dropped)``: the merged state at
+    capacity ``world * capacity``, the valid rows this shard put on the
+    wire, and the (statically impossible, defensively surfaced) quota
+    overflow flag."""
+    quota = st.capacity
+    recv, rows_sent, send_dropped = exchange_sorted_fragments(
+        st, axis, world, quota=quota
+    )
+    merged = merge_received_fragments(recv, world, quota, backend=backend)
+    return merged, rows_sent, send_dropped
+
+
 def merge_received_fragments(recv: AggState, world: int, quota: int, *,
                              backend: str = "auto"):
     """Local wide merge of the ``world`` sorted fragments an

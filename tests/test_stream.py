@@ -1,0 +1,416 @@
+"""Streamed (double-buffered super-batch) pipeline tests.
+
+Parity contract: for every run-generation policy and both key dtypes,
+any chunking whose chunk sizes are multiples of the engine's input batch
+(``memory_rows`` for the read-sort-write policies, ``batch_rows`` for
+early-agg/RS; the final chunk may be a ragged tail) produces EXACTLY the
+one-shot pipeline's result state AND SpillStats — EMPTY-padded batches
+are no-ops in every policy.  Plus: the streamed loop performs zero
+implicit transfers (explicit ``device_put`` staging only) with ONE stats
+readback at finalize; absorbing a second same-geometry super-batch hits
+the jit cache (no retrace); and the one-shot front door no longer
+retraces when N changes within a pow2-bucketed geometry.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.core.types import DeviceSpillStats, ExecConfig, empty_key
+from repro.core.operators import group_by, validate_against_oracle
+
+RNG = np.random.default_rng(7)
+CFG = ExecConfig(memory_rows=256, page_rows=32, fanin=4, batch_rows=64)
+N = 4000
+KEY_DTYPES = (np.uint32, np.uint64)
+POLICIES = ("traditional", "inrun_dedup", "early_agg", "rs")
+
+ENV = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8",
+           PYTHONPATH="src")
+
+
+def run_py(code: str):
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=ENV, capture_output=True, text=True, timeout=560,
+                       cwd=os.path.dirname(os.path.dirname(__file__)) or ".")
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def _mkinput(n=N, domain=1200, width=1, key_dtype=np.uint32, rng=RNG):
+    keys = rng.integers(0, domain, n).astype(key_dtype)
+    if key_dtype == np.uint64:
+        keys = keys << np.uint64(30)  # spread past 32 bits
+    pay = None if width == 0 else rng.normal(size=(n, width)).astype(np.float32)
+    return keys, pay
+
+
+def _unit(policy):
+    """The engine's input batch: chunk boundaries at multiples of this
+    keep the absorbed batch sequence identical to the one-shot path."""
+    return (CFG.memory_rows if policy in ("traditional", "inrun_dedup")
+            else CFG.batch_rows)
+
+
+def _chunk_sizes(policy, chunking):
+    u = _unit(policy)
+    if chunking == "one":
+        return [N]  # degenerate streaming: one super-batch
+    if chunking == "three":
+        return [6 * u, 3 * u, N - 9 * u]  # uneven, unit-aligned
+    # "tail": many equal super-batches + a ragged tail chunk whose batch
+    # count gets pow2-bucketed with trailing EMPTY batches
+    sizes = [5 * u] * ((N - 1) // (5 * u))
+    sizes.append(N - sum(sizes))
+    return sizes
+
+
+def _chunks(keys, pay, sizes):
+    s = 0
+    for c in sizes:
+        yield keys[s:s + c], None if pay is None else pay[s:s + c]
+        s += c
+
+
+def _strip(st):
+    k = np.asarray(st.keys)
+    v = k != empty_key(k.dtype)
+    return k[v], np.asarray(st.count)[v], np.asarray(st.sum)[v]
+
+
+# ---------------------------------------------------------------------------
+# streamed vs one-shot: exact result AND stats parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("key_dtype", KEY_DTYPES)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_streamed_matches_one_shot_exactly(policy, key_dtype):
+    keys, pay = _mkinput(key_dtype=key_dtype)
+    st1, s1 = pipeline.insort_aggregate_device(keys, pay, CFG, policy=policy)
+    k1, c1, v1 = _strip(st1)
+    for chunking in ("one", "three", "tail"):
+        sizes = _chunk_sizes(policy, chunking)
+        assert sum(sizes) == N
+        # output_rows pinned to the one-shot's padded capacity: identical
+        # result shapes AND one finalize compile shared by all chunkings
+        st2, s2 = pipeline.insort_aggregate_device_stream(
+            _chunks(keys, pay, sizes), CFG, policy=policy, output_rows=4096
+        )
+        assert s2.as_dict() == s1.as_dict(), chunking
+        k2, c2, v2 = _strip(st2)
+        np.testing.assert_array_equal(k1, k2, err_msg=chunking)
+        np.testing.assert_array_equal(c1, c2, err_msg=chunking)
+        np.testing.assert_allclose(v1, v2, rtol=1e-6, err_msg=chunking)
+        validate_against_oracle(st2, keys, pay)
+
+
+def test_streamed_unaligned_chunks_still_match_oracle():
+    """Chunk sizes that are NOT unit multiples interleave EMPTY padding
+    mid-stream — run composition (and thus spill accounting) may legally
+    differ, but the aggregate relation must not."""
+    keys, pay = _mkinput()
+    st1, _ = pipeline.insort_aggregate_device(keys, pay, CFG, policy="rs")
+    st2, s2 = pipeline.insort_aggregate_device_stream(
+        _chunks(keys, pay, [700] * 5 + [500]), CFG, policy="rs"
+    )
+    k1, c1, v1 = _strip(st1)
+    k2, c2, v2 = _strip(st2)
+    np.testing.assert_array_equal(k1, k2)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-4)
+    assert s2.total_spill_rows > 0
+    validate_against_oracle(st2, keys, pay)
+
+
+def test_streamed_edges():
+    # empty stream
+    st, s = pipeline.insort_aggregate_device_stream(iter(()), CFG)
+    assert int(st.occupancy()) == 0 and s.total_spill_rows == 0
+    # empty chunks interleaved with real ones
+    keys, _ = _mkinput(width=0)
+    e = np.zeros(0, np.uint32)
+    st, _ = pipeline.insort_aggregate_device_stream(
+        iter([e, keys[:1000], e, keys[1000:], e]), CFG, policy="rs"
+    )
+    validate_against_oracle(st, keys)
+    # one hot key across many chunks collapses to one group
+    hot = np.full(3 * N, 7, np.uint32)
+    st, s = pipeline.insort_aggregate_device_stream(
+        _chunks(hot, None, [N, N, N]), CFG, policy="rs"
+    )
+    assert int(st.occupancy()) == 1 and int(st.count[0]) == 3 * N
+    # plane-width restriction travels through the streamed path
+    keys, pay = _mkinput()
+    st, _ = pipeline.insort_aggregate_device_stream(
+        _chunks(keys, pay, [2000, 2000]), CFG, policy="rs", widths=(1, 0, 0)
+    )
+    assert st.widths == (1, 0, 0)
+    validate_against_oracle(st, keys, pay)
+
+
+def test_rebatch_chunks_and_super_batch_rows():
+    keys, pay = _mkinput()
+    # rebatch: ragged producer chunks → fixed super-batches
+    out = list(pipeline.rebatch_chunks(
+        _chunks(keys, pay, [700] * 5 + [500]), 1024))
+    assert [len(k) for k, _ in out] == [1024, 1024, 1024, 928]
+    np.testing.assert_array_equal(np.concatenate([k for k, _ in out]), keys)
+    np.testing.assert_array_equal(np.concatenate([p for _, p in out]), pay)
+    # the same re-chunking inline via super_batch_rows=
+    st1, s1 = pipeline.insort_aggregate_device_stream(
+        _chunks(keys, pay, [700] * 5 + [500]), CFG, policy="rs",
+        super_batch_rows=1024,
+    )
+    st2, s2 = pipeline.insort_aggregate_device_stream(
+        iter(out), CFG, policy="rs"
+    )
+    assert s1.as_dict() == s2.as_dict()
+    np.testing.assert_array_equal(*map(lambda s: _strip(s)[0], (st1, st2)))
+
+
+# ---------------------------------------------------------------------------
+# transfer discipline: explicit staging only, ONE readback at finalize
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_single_readback_under_transfer_guard():
+    """The absorb loop performs zero implicit transfers: staging is an
+    explicit ``jax.device_put``, the engine state lives on device across
+    super-batches, and only ``DeviceSpillStats.finalize()`` reads
+    anything back — O(1) scalars for the whole stream."""
+    keys, pay = _mkinput()
+    sizes = _chunk_sizes("rs", "three")
+    # compile outside the guard; the guard then proves steady state
+    st, _ = pipeline.aggregate_device_stream(
+        _chunks(keys, pay, sizes), CFG, policy="rs")
+    jax.block_until_ready(st)
+    with jax.transfer_guard("disallow"):
+        st, dstats = pipeline.aggregate_device_stream(
+            _chunks(keys, pay, sizes), CFG, policy="rs")
+        jax.block_until_ready((st, dstats))
+    assert isinstance(dstats, DeviceSpillStats)
+    stats = dstats.finalize()  # the single readback, outside the guard
+    assert stats.total_spill_rows > 0
+    validate_against_oracle(st, keys, pay)
+
+
+def test_streamed_loop_performs_no_host_syncs():
+    """Counting device-scalar ``int(...)`` conversions inside the
+    pipeline module during the absorb loop: zero — the run-slot bound is
+    computed on the host from row counts alone (no occupancy readbacks,
+    unlike the host reference loop's O(N/B))."""
+    keys, pay = _mkinput()
+    counts = {"sync": 0}
+    real_int = int
+
+    def counting_int(x, *a, **kw):
+        if isinstance(x, jax.Array):
+            counts["sync"] += 1
+        return real_int(x, *a, **kw)
+
+    pipeline.int = counting_int
+    try:
+        st, dstats = pipeline.aggregate_device_stream(
+            _chunks(keys, pay, _chunk_sizes("rs", "tail")), CFG, policy="rs")
+    finally:
+        del pipeline.int
+    assert counts["sync"] == 0
+
+
+# ---------------------------------------------------------------------------
+# compile discipline: geometry-keyed caches, no per-chunk retraces
+# ---------------------------------------------------------------------------
+
+
+def test_one_shot_does_not_retrace_within_geometry_bucket():
+    """The front door pads on the HOST to the pow2-bucketed batch
+    geometry before entering the jit, so a second call with a different N
+    in the same bucket reuses the compiled program (the recompile-churn
+    fix: the jit specializes on geometry, not on N)."""
+    keys, pay = _mkinput(n=4000)
+    pipeline.insort_aggregate_device(keys, pay, CFG, policy="rs")
+    before = len(pipeline.TRACE_LOG)
+    keys2, pay2 = _mkinput(n=3900)  # same bucket: 64 batches of 64
+    st, _ = pipeline.insort_aggregate_device(keys2, pay2, CFG, policy="rs")
+    assert pipeline.TRACE_LOG[before:] == []
+    validate_against_oracle(st, keys2, pay2)
+    # a genuinely different geometry (smaller bucket) does retrace
+    keys3, pay3 = _mkinput(n=900)
+    pipeline.insort_aggregate_device(keys3, pay3, CFG, policy="rs")
+    assert any(t[0] == "pipeline" for t in pipeline.TRACE_LOG[before:])
+
+
+def test_streamed_absorb_reuses_compilation_across_super_batches():
+    """Absorbing super-batch k+1 with the same geometry is a jit-cache
+    hit; new compiles happen only at the (log-many, pow2-spaced) run-slot
+    growth events — chunk COUNT never enters trace shapes."""
+    keys, _ = _mkinput(n=3 * 320, width=0)
+    agg = pipeline.StreamingAggregator(
+        CFG, policy="rs", key_dtype=np.uint32, width=0)
+    agg.absorb(keys[:320])  # init + absorb compile here
+    before = len(pipeline.TRACE_LOG)
+    agg.absorb(keys[320:640])  # same geometry: zero new traces
+    assert pipeline.TRACE_LOG[before:] == []
+    agg.absorb(keys[640:])  # crosses the slot bound: grow (+ the absorb
+    # re-specialized on the grown store shape), nothing else
+    new = [t[0] for t in pipeline.TRACE_LOG[before:]]
+    assert new in ([], ["grow"], ["grow", "absorb"])
+    st, _ = agg.finalize()
+    validate_against_oracle(st, keys)
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded streaming (8 fake CPU devices via subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_mesh_matches_single_device():
+    run_py("""
+        import jax, numpy as np
+        from repro.core import pipeline
+        from repro.core.types import ExecConfig, empty_key
+        from repro.core.operators import validate_against_oracle
+
+        CFG = ExecConfig(memory_rows=256, page_rows=32, fanin=4,
+                         batch_rows=64)
+        mesh = jax.make_mesh((8,), ("data",))
+        rng = np.random.default_rng(9)
+        keys = rng.integers(0, 1200, 8192).astype(np.uint32)
+        pay = rng.normal(size=(8192, 1)).astype(np.float32)
+
+        def chunks():
+            for s in range(0, 8192, 2048):
+                yield keys[s:s+2048], pay[s:s+2048]
+
+        st, stats = pipeline.insort_aggregate_device_stream(
+            chunks(), CFG, policy="rs", mesh=mesh)
+        validate_against_oracle(st, keys, pay)
+        assert stats.rows_exchanged > 0
+
+        def strip(st):
+            k = np.asarray(st.keys)
+            v = k != empty_key(k.dtype)
+            return k[v], np.asarray(st.count)[v], np.asarray(st.sum)[v]
+
+        gk, gc, gs = strip(st)
+        assert np.all(gk[:-1] < gk[1:])  # globally sorted, unique
+        st1, _ = pipeline.insort_aggregate_device(keys, pay, CFG,
+                                                  policy="rs")
+        rk, rc, rs_ = strip(st1)
+        np.testing.assert_array_equal(gk, rk)
+        np.testing.assert_array_equal(gc, rc)
+        np.testing.assert_allclose(gs, rs_, rtol=2e-4, atol=2e-3)
+        print("streamed mesh parity OK")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# front doors: schema aggregate / group_by over iterators, data adapters
+# ---------------------------------------------------------------------------
+
+
+def test_schema_aggregate_streams_column_batches():
+    import repro
+    from repro.data.pipeline import iter_column_batches
+
+    rng = np.random.default_rng(3)
+    cols = {
+        "u": rng.integers(0, 50, N).astype(np.uint32),
+        "i": rng.integers(0, 20, N).astype(np.uint32),
+        "x": rng.random(N).astype(np.float32),
+    }
+    by = repro.KeySpec.of(u=16, i=16)
+    res = repro.aggregate(
+        {k: cols[k] for k in ("u", "i")}, by=by, values=cols["x"],
+        aggs=("count", "sum", "avg"), cfg=CFG, output_estimate=1024,
+    )
+    stream = repro.aggregate(
+        iter_column_batches(cols, 640), by=by, values="x",
+        aggs=("count", "sum", "avg"), cfg=CFG, output_estimate=1024,
+    )
+    assert stream.plan["streamed"] and stream.plan["pipeline"] == "device"
+    assert stream.plan["input_rows"] == N
+    r1, r2 = res.relation(), stream.relation()
+    for k in ("u", "i", "count"):
+        np.testing.assert_array_equal(r1[k], r2[k])
+    for k in ("sum", "avg"):
+        np.testing.assert_allclose(r1[k], r2[k], rtol=1e-5, atol=1e-5)
+
+    # count-only drops the value column entirely (no payload staged)
+    res_c = repro.aggregate(
+        iter_column_batches(cols, 640), by=by, values="x", aggs=("count",),
+        cfg=CFG, output_estimate=1024,
+    )
+    np.testing.assert_array_equal(res_c.relation()["count"], r1["count"])
+
+    # empty stream
+    empty = repro.aggregate(iter(()), by=by, aggs=("count",), cfg=CFG)
+    assert empty.occupancy() == 0 and empty.plan["streamed"]
+
+
+def test_streamed_front_door_input_validation():
+    import repro
+    from repro.data.pipeline import iter_column_batches
+
+    by = repro.KeySpec.of(k=12)
+    batches = lambda: iter([{"k": np.arange(100, dtype=np.uint32)}])
+    with pytest.raises(ValueError, match="in-sort"):
+        repro.aggregate(batches(), by=by, algorithm="hash", cfg=CFG)
+    with pytest.raises(ValueError, match="device"):
+        repro.aggregate(batches(), by=by, pipeline="host", cfg=CFG)
+    with pytest.raises(TypeError, match="column"):
+        repro.aggregate(batches(), by=by, values=np.zeros(100), cfg=CFG,
+                        aggs=("sum",))
+    with pytest.raises(KeyError, match="missing"):
+        repro.aggregate(batches(), by=by, values="x", aggs=("sum",), cfg=CFG)
+    # adapters validate their inputs too
+    with pytest.raises(ValueError, match="rows"):
+        list(iter_column_batches({"k": np.arange(4)}, 0))
+    with pytest.raises(ValueError, match="expected"):
+        list(iter_column_batches(
+            {"a": np.arange(4), "b": np.arange(5)}, 2))
+
+
+def test_group_by_accepts_chunk_iterator():
+    keys, pay = _mkinput()
+    st1, s1 = group_by(keys, pay, CFG)
+    st2, s2 = group_by(
+        _chunks(keys, pay, _chunk_sizes("rs", "three")), None, CFG)
+    k1, c1, v1 = _strip(st1)
+    k2, c2, v2 = _strip(st2)
+    np.testing.assert_array_equal(k1, k2)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_allclose(v1, v2, rtol=1e-6)
+    assert s1.as_dict() == s2.as_dict()
+    with pytest.raises(ValueError, match="in-sort"):
+        group_by(_chunks(keys, pay, [N]), None, CFG, algorithm="hash")
+    with pytest.raises(ValueError, match="pairs"):
+        group_by(_chunks(keys, None, [N]), pay, CFG)
+
+
+def test_rebatch_columns_adapter():
+    from repro.data.pipeline import rebatch_columns
+
+    rng = np.random.default_rng(5)
+    shards = [
+        {"a": rng.integers(0, 9, n).astype(np.uint32),
+         "x": rng.random(n).astype(np.float32)}
+        for n in (300, 50, 700, 10)
+    ]
+    out = list(rebatch_columns(iter(shards), 256))
+    assert [len(b["a"]) for b in out] == [256, 256, 256, 256, 36]
+    np.testing.assert_array_equal(
+        np.concatenate([b["a"] for b in out]),
+        np.concatenate([s["a"] for s in shards]))
+    np.testing.assert_array_equal(
+        np.concatenate([b["x"] for b in out]),
+        np.concatenate([s["x"] for s in shards]))
+    with pytest.raises(ValueError, match="columns"):
+        list(rebatch_columns(iter([{"a": np.arange(4)},
+                                   {"b": np.arange(4)}]), 2))
