@@ -1,17 +1,18 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-absorb bench-keywidth bench-shard bench-stream bench-figures
+.PHONY: test bench bench-absorb bench-keywidth bench-shard bench-stream bench-service bench-figures
 
 test:           ## tier-1 suite (property tests skip if hypothesis absent)
 	python -m pytest -x -q
 
-bench:          ## smoke-mode absorb + key-width + pipeline + shard + stream benches (CI sanity)
+bench:          ## smoke-mode absorb + key-width + pipeline + shard + stream + service benches (CI sanity)
 	python benchmarks/bench_absorb.py --smoke
 	python benchmarks/bench_keywidth.py --smoke
 	python benchmarks/bench_pipeline.py --smoke
 	python benchmarks/bench_shard.py --smoke
 	python benchmarks/bench_stream.py --smoke
+	python benchmarks/bench_service.py --smoke
 
 bench-absorb:   ## sort-absorb vs merge-absorb microbenchmark
 	python benchmarks/bench_absorb.py
@@ -27,6 +28,9 @@ bench-shard:    ## mesh-sharded pipeline: per-world wall time + shuffle volume
 
 bench-stream:   ## streamed vs resident pipeline: overlap + peak footprint
 	python benchmarks/bench_stream.py
+
+bench-service:  ## aggregation service: sustained ingest + snapshot latency
+	python benchmarks/bench_service.py
 
 bench-figures:  ## paper-figure benchmark driver
 	python benchmarks/run.py

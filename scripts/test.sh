@@ -12,6 +12,10 @@
 #   scripts/test.sh --stream      streamed-pipeline selector: streamed vs
 #                                 resident parity + single-readback tests,
 #                                 then the streaming bench in smoke mode
+#   scripts/test.sh --service     aggregation-service selector: snapshot
+#                                 parity / non-destructiveness / TTL
+#                                 eviction tests, then the service bench
+#                                 in smoke mode
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -27,6 +31,13 @@ if [[ "${1:-}" == "--stream" ]]; then
   shift
   python -m pytest -x -q tests/test_stream.py "$@"
   python benchmarks/bench_stream.py --smoke
+  exit 0
+fi
+
+if [[ "${1:-}" == "--service" ]]; then
+  shift
+  python -m pytest -x -q tests/test_service.py "$@"
+  python benchmarks/bench_service.py --smoke
   exit 0
 fi
 

@@ -16,6 +16,7 @@ from __future__ import annotations
 _SCHEMA_EXPORTS = (
     "aggregate",
     "rollup",
+    "serve_aggregate",
     "AggResult",
     "AggSpec",
     "KeyColumn",

@@ -209,8 +209,9 @@ def wide_merge_device(
     *,
     page_rows: int,
     index_rows: int,
-    out_capacity: int,
+    out_capacity: int | None = None,
     backend: str = "xla",
+    out: AggState | None = None,
 ):
     """Traceable core of the wide merge (§4): page loop as a
     ``lax.while_loop`` over a stacked run store.  Jit-wrapped by
@@ -219,7 +220,13 @@ def wide_merge_device(
     generation + merge compile to ONE program.  Returns device scalars
     ``(out, rows_emitted, pages_read, max_index_occupancy, overflow,
     dropped)`` — no host syncs; ``dropped`` is the hard failure signal
-    (live rows trimmed), ``overflow`` the soft model-exceeded flag."""
+    (live rows trimmed), ``overflow`` the soft model-exceeded flag.
+
+    ``out`` lets the caller provide the output buffer (an all-invalid
+    :class:`AggState` matching the store's key dtype and plane widths) —
+    the merge-on-read snapshot path emits into a *fresh* caller buffer
+    so the program never aliases live engine state.  When absent, a
+    fresh buffer of ``out_capacity`` rows is allocated here."""
     R, C = store_state.keys.shape
     P = page_rows
     W = index_rows + P  # index tile + headroom for one incoming page
@@ -239,7 +246,19 @@ def wide_merge_device(
         k = store_state.keys[arange_R, pos]
         return jnp.where(cursors < n_pages, k, empty_key(kd))
 
-    out0 = empty_state(out_capacity, width, key_dtype=kd, widths=widths)
+    if out is None:
+        if out_capacity is None:
+            raise ValueError("wide_merge_device needs out= or out_capacity=")
+        out0 = empty_state(out_capacity, width, key_dtype=kd, widths=widths)
+    else:
+        if out.key_dtype != np.dtype(kd) or out.widths != widths:
+            raise ValueError(
+                f"caller-provided out buffer (dtype {out.key_dtype}, widths "
+                f"{out.widths}) does not match the run store (dtype "
+                f"{np.dtype(kd)}, widths {widths})"
+            )
+        out0 = out
+        out_capacity = out.capacity
 
     def cond(carry):
         cursors, *_ = carry
@@ -339,13 +358,18 @@ def wide_merge(
             backend=backend,
         )
     if bool(dropped):
+        # name the actual condition: the two drop sites have different fixes
+        w_cap = (index_rows or cfg.memory_rows) + cfg.page_rows
+        if int(max_occ) > w_cap:
+            cause = (f"the merge index overflowed (resident {int(max_occ)} "
+                     f"> index_rows + page_rows = {w_cap})")
+        else:
+            cause = (f"the output overran its capacity (emitted "
+                     f"{int(out_cur)} > {out_capacity})")
         raise RuntimeError(
-            "wide merge dropped rows: either the merge index overflowed "
-            f"(resident {int(max_occ)} > index_rows + page_rows = "
-            f"{(index_rows or cfg.memory_rows) + cfg.page_rows}) or the "
-            f"output overran its capacity (emitted {int(out_cur)} > "
-            f"{out_capacity}); merge fewer runs at once (pre-merge levels) "
-            "or raise index_rows / the output estimate"
+            f"wide merge during finalize dropped rows: {cause}; merge "
+            "fewer runs at once (pre-merge levels) or raise index_rows / "
+            "the output estimate"
         )
     stats.merge_steps += 1
     stats.merge_levels += 1

@@ -81,6 +81,7 @@ from repro.core.types import (
     empty_state,
     expand_engine_scalars,
     key_dtype_context,
+    max_key,
     rows_to_state,
     squeeze_engine_scalars,
 )
@@ -456,9 +457,12 @@ def _device_premerge(store: AggState, lens, *, fanin: int, levels: int, backend:
 
 def _merge_phase(store, lens, spilled, nruns, overflow, *, page_rows: int,
                  index_rows: int, fanin: int, premerge_levels: int,
-                 backend: str, out_capacity: int):
+                 backend: str, out_capacity: int, rows_retired=None,
+                 out_buffer=None):
     """§4.3 pre-merge levels + the wide merge + stats assembly — shared
-    by the one-shot program and the streamed finalize."""
+    by the one-shot program, the streamed finalize, and the merge-on-read
+    snapshot (which passes a fresh ``out_buffer`` so emission never
+    aliases live engine state, plus the ``rows_retired`` accumulator)."""
     zero = jnp.int32(0)
     store, lens, spill_m, msteps, mlevels = _device_premerge(
         store, lens, fanin=fanin, levels=premerge_levels, backend=backend
@@ -466,7 +470,7 @@ def _merge_phase(store, lens, spilled, nruns, overflow, *, page_rows: int,
     out, out_cur, pages_read, max_occ, ix_overflow, dropped = (
         merge_mod.wide_merge_device(
             store, lens, page_rows=page_rows, index_rows=index_rows,
-            out_capacity=out_capacity, backend=backend,
+            out_capacity=out_capacity, backend=backend, out=out_buffer,
         )
     )
     # merge/emission stats are charged only when run generation actually
@@ -487,6 +491,7 @@ def _merge_phase(store, lens, spilled, nruns, overflow, *, page_rows: int,
         run_buffer_overflowed=overflow,
         merge_dropped_rows=dropped,
         rows_exchanged=zero,
+        rows_retired=zero if rows_retired is None else rows_retired,
     )
     return out, stats
 
@@ -547,6 +552,7 @@ def _pipeline_body(
             run_buffer_overflowed=overflow,
             merge_dropped_rows=jnp.bool_(False),
             rows_exchanged=zero,
+            rows_retired=zero,
         )
         return store, lens, table, rg_stats
 
@@ -960,26 +966,154 @@ def _trim_slots(es, trim: int):
     return dataclasses.replace(es, store=store, lens=es.lens[:trim])
 
 
-def _finalize_stream_body(es, *, policy, page_rows, index_rows, fanin,
-                          premerge_levels, backend, out_capacity, trim):
+def _finalize_stream_body(es, retired, *, policy, page_rows, index_rows,
+                          fanin, premerge_levels, backend, out_capacity,
+                          trim):
+    """Drain + pre-merge + wide merge of a stream engine state.
+
+    This ONE program serves both the destructive finalize and the
+    merge-on-read snapshot: it only *reads* ``es`` and emits into a
+    fresh output buffer, so (un-donated) it is non-destructive by
+    construction — the snapshot path simply keeps the input state alive.
+    ``retired`` threads the service's eviction accumulator into the
+    stats (``None`` when no eviction ever ran)."""
     TRACE_LOG.append(("finalize", policy, out_capacity))
     es = _trim_slots(es, trim)
+    ws = (es.store.sum.shape[-1], es.store.min.shape[-1],
+          es.store.max.shape[-1])  # store planes are stacked (R, C, w)
+    fresh_out = empty_state(out_capacity, max(ws), key_dtype=es.key_dtype,
+                            widths=ws)
     store, lens, table, spilled, nruns, overflow = _engine_finish(
         es, policy=policy, backend=backend
     )
     return _merge_phase(
         store, lens, spilled, nruns, overflow, page_rows=page_rows,
         index_rows=index_rows, fanin=fanin, premerge_levels=premerge_levels,
-        backend=backend, out_capacity=out_capacity,
+        backend=backend, out_capacity=out_capacity, rows_retired=retired,
+        out_buffer=fresh_out,
     )
 
 
 # no donation: the merged output's shapes differ from the engine state's
-# leaves, so the donated buffers would go unused (XLA warns, no benefit)
+# leaves, so the donated buffers would go unused (XLA warns, no benefit).
+# Non-donation is also load-bearing for the service: snapshot_device()
+# runs this very program on the LIVE engine state.
 _finalize_stream = jax.jit(
     _finalize_stream_body,
     static_argnames=("policy", "page_rows", "index_rows", "fanin",
                      "premerge_levels", "backend", "out_capacity", "trim"),
+)
+
+
+# ---------------------------------------------------------------------------
+# key eviction / TTL: retire expired key ranges from the live engine
+# ---------------------------------------------------------------------------
+
+
+def _retire_sorted_prefix(planes: AggState, cut, valid):
+    """Shift every slot's sorted row-planes left by its prefix ``cut`` and
+    restore the EMPTY fill beyond the surviving rows.
+
+    ``planes`` leaves are (R, C[, w]); ``cut``/``valid`` are (R,) with
+    ``cut <= valid`` (every slot is ascending-sorted with EMPTY — the max
+    sentinel — padding its tail, so a ``searchsorted`` cut can never
+    reach into the pad).  The fills reproduce :func:`empty_state` byte
+    for byte, so a fully retired slot is indistinguishable from a fresh
+    one."""
+    C = planes.keys.shape[1]
+    kd = planes.keys.dtype
+    ar = jnp.arange(C, dtype=jnp.int32)
+    idx2 = jnp.minimum(ar[None, :] + cut[:, None], max(C - 1, 0))
+    live = ar[None, :] < (valid - cut)[:, None]
+    inf = np.float32(np.inf)
+    fills = AggState(keys=jnp.asarray(empty_key(kd), kd),
+                     count=jnp.int32(0), sum=jnp.float32(0),
+                     min=jnp.float32(inf), max=jnp.float32(-inf))
+
+    def shift(a, f):
+        if a.shape[1] == 0:
+            return a
+        if a.ndim == 2:
+            return jnp.where(live, jnp.take_along_axis(a, idx2, axis=1), f)
+        return jnp.where(live[:, :, None],
+                         jnp.take_along_axis(a, idx2[:, :, None], axis=1), f)
+
+    return jax.tree.map(shift, planes, fills)
+
+
+def _evict_compact_body(es, threshold, retired, *, policy, backend):
+    """Retire every resident row with key < ``threshold`` from the live
+    engine state and compact the surviving run slots to the store prefix.
+
+    Every component of the engine keeps its rows ascending-sorted with
+    EMPTY-padded tails (closed slots are whole sorted runs, the RS open
+    slot's ``[0, cursor)`` prefix is ascending by the frontier invariant,
+    tables are OrderedIndexes), so retirement is a per-slot
+    ``searchsorted`` prefix cut — no scatter, no readback.  Surviving
+    closed runs are permuted to the slot prefix (stable, order
+    preserving) so the host's input-over-memory slot bound can be
+    re-baselined from the returned ``ridx`` and absorbs keep splicing at
+    the high-water mark.  ``retired`` accumulates the number of state
+    rows removed (``None`` on first eviction): nothing leaves the engine
+    without being counted here or emitted by a snapshot/finalize."""
+    del backend  # uniform across backends: pure lax gather/permute
+    TRACE_LOG.append(("evict", policy))
+    R, C = es.run_slots, es.slot_rows
+    arR = jnp.arange(R, dtype=jnp.int32)
+    thr = jnp.asarray(threshold, es.store.keys.dtype)
+    is_open = arR == es.ridx
+    # per-slot valid rows: closed slots carry lens, the RS open slot's
+    # prefix length is the cursor (its lens stays 0 until the run closes)
+    valid = jnp.maximum(es.lens, jnp.where(is_open, es.cursor, 0))
+    cut = jax.vmap(
+        lambda row: jnp.searchsorted(row, thr, side="left").astype(jnp.int32)
+    )(es.store.keys)
+    cut = jnp.minimum(cut, valid)
+    store = _retire_sorted_prefix(es.store, cut, valid)
+    lens_new = es.lens - jnp.minimum(cut, es.lens)
+    cursor = es.cursor - jnp.where(
+        (es.ridx >= 0) & (es.ridx < R),
+        cut[jnp.clip(es.ridx, 0, max(R - 1, 0))], 0,
+    )
+    # compact: surviving closed runs first (order preserved), then the
+    # open slot, then the all-EMPTY retired slots
+    order = jnp.where(lens_new > 0, 0, jnp.where(is_open, 1, 2))
+    perm = jnp.argsort(order, stable=True)
+    store = jax.tree.map(lambda a: a[perm], store)
+    lens_new = lens_new[perm]
+    ridx = jnp.sum(lens_new > 0, dtype=jnp.int32)
+    delta = jnp.sum(cut, dtype=jnp.int32)
+    # resident tables (early-agg index / RS partitions): same prefix cut,
+    # lifted to one (1, capT) slot
+    table, table2 = es.table, es.table2
+    for name in ("table", "table2"):
+        t = getattr(es, name)
+        if t.capacity == 0:
+            continue
+        occ = t.occupancy()
+        cut_t = jnp.searchsorted(t.keys, thr, side="left").astype(jnp.int32)
+        cut_t = jnp.minimum(cut_t, occ)
+        lifted = jax.tree.map(lambda a: a[None], t)
+        lifted = _retire_sorted_prefix(lifted, cut_t[None], occ[None])
+        t = jax.tree.map(lambda a: a[0], lifted)
+        delta = delta + cut_t
+        if name == "table":
+            table = t
+        else:
+            table2 = t
+    zero = jnp.int32(0)
+    retired = delta + (zero if retired is None else retired)
+    es = dataclasses.replace(
+        es, table=table, table2=table2, store=store, lens=lens_new,
+        cursor=cursor, ridx=ridx,
+    )
+    return es, retired
+
+
+# donated: eviction rewrites the state in place (same shapes throughout)
+_evict_compact = jax.jit(
+    _evict_compact_body, static_argnames=("policy", "backend"),
+    donate_argnums=(0,),
 )
 
 
@@ -1085,6 +1219,14 @@ class StreamingAggregator:
         self._finalized = False
         self.rows_seen = 0
         self.rows_padded = 0  # cumulative padded rows (all shards)
+        # service-mode extras (inert until snapshot()/evict_below() are
+        # used): the device-resident retired-row accumulator, and the
+        # slot-accounting baseline taken at the last eviction — eviction
+        # compacts live runs to the store prefix and re-anchors the
+        # host's input-over-memory slot bound there.
+        self._retired = None  # created device-side by the first evict
+        self._base_slots = 0  # live closed runs (+ slack) at the baseline
+        self._rows_since_evict = 0  # padded rows absorbed since baseline
 
     # -- staging ---------------------------------------------------------
 
@@ -1156,14 +1298,20 @@ class StreamingAggregator:
         (the absorb scan carries only this window of the store)."""
         return self._bound(chunk_padded) + 1
 
+    def _bound_total(self, rows_since_baseline: int) -> int:
+        """Slot bound honouring the eviction baseline: live runs present
+        at the last evict (``_base_slots``, with finish slack) plus the
+        input-over-memory bound of the rows absorbed since."""
+        return self._base_slots + self._bound(rows_since_baseline)
+
     def _slots_needed(self, rows_padded_total: int, chunk_padded: int) -> int:
         # the store must cover the cumulative bound AND the local window
         # the next absorb splices at the current high-water mark (the
         # dynamic_update_slice must never clamp over occupied slots)
         prev = rows_padded_total - chunk_padded
         return _pow2_ceil(max(
-            self._bound(rows_padded_total),
-            self._bound(prev) + self._local_slots(chunk_padded),
+            self._bound_total(rows_padded_total),
+            self._bound_total(prev) + self._local_slots(chunk_padded),
         ))
 
     def absorb_staged(self, staged: StagedChunk | None) -> None:
@@ -1173,8 +1321,9 @@ class StreamingAggregator:
             return
         if self._finalized:
             raise RuntimeError("StreamingAggregator already finalized")
-        needed = self._slots_needed(self.rows_padded + staged.rows_padded,
-                                    staged.rows_padded)
+        needed = self._slots_needed(
+            self._rows_since_evict + staged.rows_padded, staged.rows_padded
+        )
         local = self._local_slots(staged.rows_padded)
         with key_dtype_context(self.key_dtype):
             if self._es is None:
@@ -1208,6 +1357,7 @@ class StreamingAggregator:
                     self._es, staged.bk, staged.bp)
         self.rows_seen += staged.rows
         self.rows_padded += staged.rows_padded
+        self._rows_since_evict += staged.rows_padded
 
     def absorb(self, keys, payload=None) -> None:
         """stage + absorb in one call (no overlap — prefer the staged
@@ -1230,32 +1380,137 @@ class StreamingAggregator:
                                 widths=self.widths),
                     DeviceSpillStats.zeros(),
                 )
-        from repro.core.insort import plan_pre_merge_levels  # lazy: cycle
-
-        est = (self.cfg.memory_rows * self.cfg.fanin
-               if self.output_estimate is None else self.output_estimate)
-        rows_loc = self.rows_padded // self.world
-        r_static = _stream_run_slots(self.policy, rows_loc,
-                                     self.cfg.memory_rows)
-        pre = plan_pre_merge_levels(est, self.cfg, r_static)
-        out_cap = max(1, self.output_rows or rows_loc)
-        trim = min(r_static, self._R)  # merge the exact bound, not pow2
+        pre, out_cap, trim = self._merge_plan(bucketed=False)
         es, self._es = self._es, None
-        with key_dtype_context(self.key_dtype):
-            if self.mesh is None:
-                return _finalize_stream(
-                    es, policy=self.policy, page_rows=self.cfg.page_rows,
-                    index_rows=self.index_rows, fanin=self.cfg.fanin,
-                    premerge_levels=pre, backend=self.backend,
-                    out_capacity=out_cap, trim=trim,
-                )
-            return self._fns.finalize(pre, out_cap, trim)(es)
+        return self._run_merge(es, pre, out_cap, trim)
 
     def finalize(self) -> tuple[AggState, SpillStats]:
         """:meth:`finalize_device` + the ONE host readback of spill stats
         (raises loudly on run-buffer overflow / dropped merge rows)."""
         state, dstats = self.finalize_device()
         return state, dstats.finalize()
+
+    # -- merge-on-read snapshots + eviction (the service protocol) -------
+
+    def _merge_plan(self, *, bucketed: bool) -> tuple[int, int, int]:
+        """Static merge-phase plan ``(premerge_levels, out_capacity,
+        trim)``.  ``bucketed`` pow2-buckets the capacity statics so a
+        long-lived session's periodic snapshots hit O(log N) compiled
+        programs instead of one per snapshot; pre-merge levels are always
+        planned from the EXACT slot bound (extra all-EMPTY trim slots are
+        merge no-ops and never perturb stats, but the level plan itself
+        must match the one-shot pipeline's for stats parity)."""
+        from repro.core.insort import plan_pre_merge_levels  # lazy: cycle
+
+        est = (self.cfg.memory_rows * self.cfg.fanin
+               if self.output_estimate is None else self.output_estimate)
+        rows_loc = self.rows_padded // self.world
+        r_static = self._bound_total(self._rows_since_evict)
+        pre = plan_pre_merge_levels(est, self.cfg, r_static)
+        if bucketed:
+            out_cap = self.output_rows or _pow2_ceil(max(1, rows_loc))
+            trim = min(_pow2_ceil(r_static), self._R)
+        else:
+            out_cap = max(1, self.output_rows or rows_loc)
+            trim = min(r_static, self._R)  # merge the exact bound, not pow2
+        return pre, out_cap, trim
+
+    def _run_merge(self, es, pre: int, out_cap: int, trim: int):
+        """Dispatch the (non-donating) drain + merge program on ``es``."""
+        with key_dtype_context(self.key_dtype):
+            if self.mesh is None:
+                return _finalize_stream(
+                    es, self._retired, policy=self.policy,
+                    page_rows=self.cfg.page_rows, index_rows=self.index_rows,
+                    fanin=self.cfg.fanin, premerge_levels=pre,
+                    backend=self.backend, out_capacity=out_cap, trim=trim,
+                )
+            if self._retired is None:
+                return self._fns.finalize(pre, out_cap, trim, False)(es)
+            return self._fns.finalize(pre, out_cap, trim, True)(
+                es, self._retired)
+
+    def snapshot_device(self) -> tuple[AggState, DeviceSpillStats]:
+        """Merge-on-read snapshot: answer the current aggregate WITHOUT
+        consuming the engine.
+
+        Runs the same statically planned drain + pre-merge + wide merge
+        program as :meth:`finalize_device` — it is non-donating and emits
+        into a fresh output buffer, so the live engine state is untouched
+        (byte-for-byte) and ingest continues afterwards.  Zero host
+        syncs; snapshot dispatch is ordered before any subsequent donated
+        absorb by JAX's program-order execution, so overlapping ingest is
+        safe.  Capacity statics are pow2-bucketed to bound compile count
+        over a session's lifetime."""
+        if self._finalized:
+            raise RuntimeError("StreamingAggregator already finalized")
+        if self._es is None:  # nothing absorbed (or created) yet
+            with key_dtype_context(self.key_dtype):
+                return (
+                    empty_state(0, self.width, key_dtype=self.key_dtype,
+                                widths=self.widths),
+                    DeviceSpillStats.zeros(),
+                )
+        pre, out_cap, trim = self._merge_plan(bucketed=True)
+        return self._run_merge(self._es, pre, out_cap, trim)
+
+    def snapshot(self) -> tuple[AggState, SpillStats]:
+        """:meth:`snapshot_device` + the host readback of spill stats
+        (overflow errors name the snapshot entry point)."""
+        state, dstats = self.snapshot_device()
+        return state, dstats.finalize(entry_point="snapshot")
+
+    def evict_below(self, threshold) -> int:
+        """Retire every resident row whose key is ``< threshold`` from
+        the live engine (TTL / watermark eviction for sessionization).
+
+        Keys are retired from the run store AND the resident tables by
+        sorted prefix cuts, surviving runs are compacted to the store
+        prefix, and the host re-anchors its slot accounting at the new
+        high-water mark — this is the ONE host sync of the service
+        protocol (a single scalar readback at the eviction boundary).
+        Retired rows are accumulated device-side and surface as
+        ``SpillStats.rows_retired`` on every later snapshot/finalize:
+        nothing is silently dropped.  Returns the cumulative retired-row
+        count."""
+        if self._finalized:
+            raise RuntimeError("StreamingAggregator already finalized")
+        thr = int(threshold)
+        if not (0 <= thr <= int(max_key(self.key_dtype))):
+            raise ValueError(
+                f"eviction threshold {threshold!r} out of range for "
+                f"{self.key_dtype} keys (must be <= max_key, below the "
+                f"EMPTY sentinel)"
+            )
+        if self._es is None:  # nothing resident: nothing to retire
+            return 0 if self._retired is None else int(
+                np.sum(np.asarray(self._retired)))
+        with key_dtype_context(self.key_dtype):
+            if self.mesh is None:
+                thr_dev = jax.device_put(np.asarray(thr, self.key_dtype))
+                self._es, self._retired = _evict_compact(
+                    self._es, thr_dev, self._retired, policy=self.policy,
+                    backend=self.backend,
+                )
+                new_ridx = int(self._es.ridx)
+            else:
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+
+                thr_dev = jax.device_put(
+                    np.asarray(thr, self.key_dtype),
+                    NamedSharding(self.mesh, P()),
+                )
+                args = (() if self._retired is None else (self._retired,))
+                self._es, self._retired, ridx_max = self._fns.evict(
+                    self._retired is not None
+                )(self._es, thr_dev, *args)
+                new_ridx = int(ridx_max)
+        slack = {"traditional": 0, "inrun_dedup": 0,
+                 "early_agg": 2, "rs": 4}[self.policy]
+        self._base_slots = new_ridx + slack
+        self._rows_since_evict = 0
+        return int(np.sum(np.asarray(self._retired)))
 
 
 def _as_chunk(c):
@@ -1504,17 +1759,24 @@ def _mesh_stream_fns(
         )
 
     @functools.lru_cache(maxsize=None)
-    def finalize_fn(premerge_levels: int, out_capacity: int, trim: int):
-        def body(es):
+    def finalize_fn(premerge_levels: int, out_capacity: int, trim: int,
+                    with_retired: bool = False):
+        def body(es, *rest):
             es = _trim_slots(squeeze_engine_scalars(es), trim)
+            fresh_out = empty_state(out_capacity, width, key_dtype=kd,
+                                    widths=widths)
             store, lens, table, spilled, nruns, overflow = _engine_finish(
                 es, policy=policy, backend=backend
             )
+            # per-shard retired rows go into the stats BEFORE cross_shard
+            # psums them into the global total
+            retired = rest[0][0] if with_retired else None
             out, dstats = _merge_phase(
                 store, lens, spilled, nruns, overflow, page_rows=page_rows,
                 index_rows=index_rows, fanin=fanin,
                 premerge_levels=premerge_levels, backend=backend,
-                out_capacity=out_capacity,
+                out_capacity=out_capacity, rows_retired=retired,
+                out_buffer=fresh_out,
             )
             merged, sent, send_dropped = gb_mod.exchange_and_merge(
                 out, axis, world, backend=backend
@@ -1526,13 +1788,37 @@ def _mesh_stream_fns(
             )
             return merged, dstats.cross_shard(axis)
 
-        # no donation: outputs don't share the state leaves' shapes
+        in_specs = (state_spec,) + ((P(axis),) if with_retired else ())
+        # no donation: outputs don't share the state leaves' shapes —
+        # which is also what makes this program double as the per-shard
+        # merge-on-read snapshot (the live state survives the call)
         return jax.jit(
             shard_map(
-                body, mesh=mesh, in_specs=(state_spec,),
+                body, mesh=mesh, in_specs=in_specs,
                 out_specs=(agg_spec, DeviceSpillStats(*(P(),) * n_stats)),
                 check=False,
             ),
+        )
+
+    @functools.lru_cache(maxsize=None)
+    def evict_fn(with_retired: bool):
+        def body(es, thr, *rest):
+            es, retired = _evict_compact_body(
+                squeeze_engine_scalars(es), thr,
+                rest[0][0] if with_retired else None,
+                policy=policy, backend=backend,
+            )
+            ridx_max = jax.lax.pmax(es.ridx, axis)
+            return expand_engine_scalars(es), retired[None], ridx_max
+
+        in_specs = ((state_spec, P())
+                    + ((P(axis),) if with_retired else ()))
+        return jax.jit(
+            shard_map(
+                body, mesh=mesh, in_specs=in_specs,
+                out_specs=(state_spec, P(axis), P()), check=False,
+            ),
+            donate_argnums=(0,),
         )
 
     class _Fns:
@@ -1543,4 +1829,5 @@ def _mesh_stream_fns(
     fns.absorb = absorb_fn
     fns.grow = grow_fn
     fns.finalize = finalize_fn
+    fns.evict = evict_fn
     return fns

@@ -595,6 +595,23 @@ def _aggregate_stream(
     return AggResult(state=state, stats=stats, by=by, aggs=aggs, plan=plan)
 
 
+def serve_aggregate(**kwargs):
+    """Open a long-lived aggregation session — the serving twin of
+    :func:`aggregate` for continuously arriving input.
+
+    Same schema arguments (``by=``, ``values=``, ``aggs=``) plus
+    ``watermark=<major key column>`` for TTL expiry and the streaming
+    engine's knobs (``policy=``, ``cfg=``, ``mesh=``, …).  The session
+    ingests column batches with zero host readbacks and answers
+    **merge-on-read snapshots**: sorted :class:`AggResult` relations
+    computed without consuming the live engine state, so ingest
+    continues uninterrupted.  See
+    :class:`repro.service.AggregationSession`."""
+    from repro.service import AggregationSession  # lazy: optional layer
+
+    return AggregationSession(**kwargs)
+
+
 # ---------------------------------------------------------------------------
 # generic rollup: any prefix hierarchy, all levels from ONE sort
 # ---------------------------------------------------------------------------

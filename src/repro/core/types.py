@@ -354,6 +354,10 @@ class SpillStats:
     # entered the cross-shard all_to_all exchange, summed over shards.
     # 0 for every single-device plan.
     rows_exchanged: int = 0
+    # eviction accounting (streaming service TTL/key retirement): state
+    # rows retired from the live engine — nothing leaves the engine
+    # without being counted here or emitted.  0 for every one-shot plan.
+    rows_retired: int = 0
 
     @property
     def total_spill_rows(self) -> int:
@@ -384,6 +388,7 @@ class SpillStats:
             index_overflowed=any(s.index_overflowed for s in shards),
             max_index_occupancy=max(s.max_index_occupancy for s in shards),
             rows_exchanged=sum(s.rows_exchanged for s in shards),
+            rows_retired=sum(s.rows_retired for s in shards),
         )
 
 
@@ -419,12 +424,13 @@ class DeviceSpillStats:
     run_buffer_overflowed: jax.Array
     merge_dropped_rows: jax.Array
     rows_exchanged: jax.Array
+    rows_retired: jax.Array
 
     @classmethod
     def zeros(cls) -> "DeviceSpillStats":
         z = jnp.int32(0)
         f = jnp.bool_(False)
-        return cls(z, z, z, z, z, z, z, f, z, f, f, z)
+        return cls(z, z, z, z, z, z, z, f, z, f, f, z, z)
 
     def cross_shard(self, axis_name: str) -> "DeviceSpillStats":
         """Reduce per-shard accounting to the global view inside a
@@ -450,23 +456,41 @@ class DeviceSpillStats:
             run_buffer_overflowed=por(self.run_buffer_overflowed),
             merge_dropped_rows=por(self.merge_dropped_rows),
             rows_exchanged=ps(self.rows_exchanged),
+            rows_retired=ps(self.rows_retired),
         )
 
-    def finalize(self) -> SpillStats:
+    def finalize(self, *, entry_point: str = "finalize") -> SpillStats:
         """One host readback → plain :class:`SpillStats` (the pipeline's
-        only device→host synchronization point)."""
+        only device→host synchronization point).
+
+        ``entry_point`` names the merge program that produced these stats
+        ("finalize" for the destructive drain, "snapshot" for the
+        merge-on-read service query) so an overflow raised here tells the
+        caller which knob to turn.
+        """
         if bool(self.run_buffer_overflowed):
             raise RuntimeError(
-                "device run buffer overflowed its preallocated run slots; "
-                "results would be missing rows (this is a bug in the slot "
-                "bound — please report input sizes and ExecConfig)"
+                f"device run buffer overflowed its preallocated run slots "
+                f"during {entry_point}; results would be missing rows "
+                "(this is a bug in the slot bound — please report input "
+                "sizes and ExecConfig)"
             )
         if bool(self.merge_dropped_rows):
+            if entry_point == "snapshot":
+                hint = (
+                    "raise output_rows (the snapshot output capacity) or "
+                    "pass a larger output_estimate (more pre-merge levels)"
+                )
+            else:
+                hint = (
+                    "pass a larger output_estimate (more pre-merge levels) "
+                    "or raise index_rows"
+                )
             raise RuntimeError(
-                "wide-merge index overflowed its capacity and dropped rows "
-                f"(max resident {int(self.max_index_occupancy)} rows); the "
-                "merge plan admitted too many runs at once — pass a larger "
-                "output_estimate (more pre-merge levels) or raise index_rows"
+                f"the wide merge during {entry_point} dropped rows: either "
+                "its index overflowed its capacity (max resident "
+                f"{int(self.max_index_occupancy)} rows) or the output "
+                f"overran its buffer — {hint}"
             )
         return SpillStats(
             rows_spilled_run_generation=int(self.rows_spilled_run_generation),
@@ -479,4 +503,5 @@ class DeviceSpillStats:
             index_overflowed=bool(self.index_overflowed),
             max_index_occupancy=int(self.max_index_occupancy),
             rows_exchanged=int(self.rows_exchanged),
+            rows_retired=int(self.rows_retired),
         )

@@ -131,9 +131,13 @@ def exchange_sorted_fragments(st: AggState, axis: str, world: int, *, quota: int
 def exchange_and_merge(st: AggState, axis: str, world: int, *,
                        backend: str = "auto"):
     """Key-range exchange + per-owner merge of a sorted, duplicate-free
-    local state — the shared tail of the mesh-sharded pipelines (one-shot
-    and streamed).  The per-peer quota is the full local capacity, so the
-    exchange can never cut live rows.
+    local state — the shared tail of the mesh-sharded pipelines: the
+    one-shot finalize, the streamed finalize, AND the service's
+    merge-on-read snapshot all run this same program over their
+    per-shard merge output (the snapshot feeds it a fresh buffer, so
+    exchanging never perturbs the live per-shard engine states).  The
+    per-peer quota is the full local capacity, so the exchange can never
+    cut live rows.
 
     Returns ``(merged, rows_sent, send_dropped)``: the merged state at
     capacity ``world * capacity``, the valid rows this shard put on the

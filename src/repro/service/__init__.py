@@ -1,0 +1,33 @@
+"""Aggregation as a service: long-lived ingest sessions over the
+device-resident streaming engine.
+
+The paper's deployment story (F1 Query) is an *operator inside a
+serving system*, not a batch job: rows arrive continuously and queries
+observe the running aggregate mid-flight.  This package is that layer —
+a persistent :class:`~repro.core.pipeline.StreamingAggregator` wrapped
+in a service protocol:
+
+* :class:`AggregationService` — engine-level: packed keys in, double-
+  buffered ingest, **merge-on-read snapshots** (non-destructive drain +
+  pre-merge + wide merge into a fresh buffer; the live engine state is
+  byte-untouched and ingest continues), watermark eviction, and a host
+  metrics facade.
+* :class:`AggregationSession` / :func:`serve_aggregate` — schema-level:
+  composite :class:`~repro.core.schema.KeySpec` keys, declarative
+  :class:`~repro.core.schema.AggSpec` aggregates, snapshots as
+  :class:`~repro.core.schema.AggResult`, and TTL expiry keyed on the
+  major (watermark) key column.
+* :class:`ServiceMetrics` — rows ingested, snapshot latency quantiles,
+  occupancy and duplicate rate, all maintained host-side from counters
+  the engine already produces (no per-chunk readbacks).
+"""
+from repro.service.metrics import ServiceMetrics
+from repro.service.service import AggregationService
+from repro.service.session import AggregationSession, serve_aggregate
+
+__all__ = [
+    "AggregationService",
+    "AggregationSession",
+    "ServiceMetrics",
+    "serve_aggregate",
+]

@@ -18,6 +18,15 @@ def run_example(name: str, env_extra: dict, timeout: int = 420) -> str:
     return r.stdout
 
 
+def test_streaming_service_smoke():
+    out = run_example("streaming_service.py",
+                      {"SERVICE_MINUTES": "16", "SERVICE_ROWS": "512"})
+    assert "mid-stream queries:" in out       # snapshots answered mid-ingest
+    assert "rows retired" in out              # TTL expiry actually fired
+    assert "surviving events" in out          # window accounting closed
+    assert "sessionized service OK" in out
+
+
 def test_quickstart_smoke_including_streamed_ingest():
     out = run_example("quickstart.py", {"QUICKSTART_N": "8000"})
     assert "distinct users:" in out
