@@ -1,18 +1,20 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-absorb bench-keywidth bench-shard bench-stream bench-service bench-figures
+.PHONY: test bench bench-absorb bench-keywidth bench-shard bench-stream bench-service bench-adaptive bench-figures calibrate calibrate-check
 
 test:           ## tier-1 suite (property tests skip if hypothesis absent)
 	python -m pytest -x -q
 
-bench:          ## smoke-mode absorb + key-width + pipeline + shard + stream + service benches (CI sanity)
+bench:          ## smoke-mode benches + calibration code path (CI sanity)
 	python benchmarks/bench_absorb.py --smoke
 	python benchmarks/bench_keywidth.py --smoke
 	python benchmarks/bench_pipeline.py --smoke
 	python benchmarks/bench_shard.py --smoke
 	python benchmarks/bench_stream.py --smoke
 	python benchmarks/bench_service.py --smoke
+	python benchmarks/bench_adaptive.py --smoke
+	python benchmarks/calibrate.py --smoke
 
 bench-absorb:   ## sort-absorb vs merge-absorb microbenchmark
 	python benchmarks/bench_absorb.py
@@ -31,6 +33,15 @@ bench-stream:   ## streamed vs resident pipeline: overlap + peak footprint
 
 bench-service:  ## aggregation service: sustained ingest + snapshot latency
 	python benchmarks/bench_service.py
+
+bench-adaptive: ## adaptive vs fixed policies on phase-change key streams
+	python benchmarks/bench_adaptive.py
+
+calibrate:      ## measure per-row cost constants, regenerate core/_cost_constants.py
+	python benchmarks/calibrate.py
+
+calibrate-check: ## validate the checked-in constants against the generator schema
+	python benchmarks/calibrate.py --check
 
 bench-figures:  ## paper-figure benchmark driver
 	python benchmarks/run.py

@@ -16,6 +16,12 @@
 #                                 parity / non-destructiveness / TTL
 #                                 eviction tests, then the service bench
 #                                 in smoke mode
+#   scripts/test.sh --adaptive    adaptive-policy selector: governor
+#                                 decision paths, oracle parity on
+#                                 Zipf/phase-change streams, readback
+#                                 accounting, constants-schema check,
+#                                 then the calibration code path and the
+#                                 adaptive bench in smoke mode
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -38,6 +44,15 @@ if [[ "${1:-}" == "--service" ]]; then
   shift
   python -m pytest -x -q tests/test_service.py "$@"
   python benchmarks/bench_service.py --smoke
+  exit 0
+fi
+
+if [[ "${1:-}" == "--adaptive" ]]; then
+  shift
+  python -m pytest -x -q tests/test_adaptive.py "$@"
+  python benchmarks/calibrate.py --check
+  python benchmarks/calibrate.py --smoke
+  python benchmarks/bench_adaptive.py --smoke
   exit 0
 fi
 

@@ -191,6 +191,247 @@ def merge_levels_traditional(I: float, M: float, F: int) -> int:
     return ceil_log(runs, F)
 
 
+# ---------------------------------------------------------------------------
+# calibrated layer: measured per-row constants + fitted crossover surface
+# ---------------------------------------------------------------------------
+#
+# Everything above is the paper's *volume* arithmetic (rows spilled,
+# merge levels) — machine-independent by construction.  The layer below
+# attaches measured per-row times from ``core/_cost_constants.py``
+# (regenerated by ``make calibrate``) so the planner and the runtime
+# policy governor (:mod:`repro.core.adaptive`) can compare policies in
+# seconds on *this* machine, which is exactly what the hash-vs-sort
+# empirical study says cannot be hand-set.
+
+COST_SCHEMA_VERSION = 1
+COST_FIELDS = (
+    "absorb_row_ns",
+    "absorb_dup_row_ns",
+    "sort_row_ns",
+    "merge_row_ns",
+    "hash_probe_row_ns",
+    "spill_write_row_ns",
+)
+#: per-policy absorb fields are measured at two duplicate-rate anchors
+#: (unique input ≈ d=0, heavy-duplicate input ≈ d=1) and interpolated.
+ABSORB_FIELDS = ("absorb_row_ns", "absorb_dup_row_ns")
+ABSORB_POLICIES = ("traditional", "inrun_dedup", "early_agg", "rs")
+
+#: policies whose absorb step sorts each incoming batch from scratch —
+#: these get the zero-sort-term credit when the input is already ordered.
+SORTING_POLICIES = ("traditional", "inrun_dedup")
+
+
+class StaleConstantsError(ValueError):
+    """``core/_cost_constants.py`` does not match the generator schema —
+    re-run ``make calibrate`` (the file is autogenerated)."""
+
+
+def validate_constants(table: dict, *, source: str = "core/_cost_constants.py"):
+    """Check a ``COST_CONSTANTS``-shaped table against the generator
+    schema; raises :class:`StaleConstantsError` naming every problem.
+    CI runs this (tests/test_adaptive.py) so a schema drift between the
+    generator and the checked-in file fails loudly."""
+    problems = []
+    if not isinstance(table, dict) or not table:
+        problems.append("top level must be a non-empty dict of backend entries")
+        table = {}
+    for backend, entry in table.items():
+        where = f"{source}[{backend!r}]"
+        if not isinstance(entry, dict):
+            problems.append(f"{where}: entry must be a dict")
+            continue
+        ver = entry.get("schema_version")
+        if ver != COST_SCHEMA_VERSION:
+            problems.append(
+                f"{where}: schema_version={ver!r}, generator writes "
+                f"{COST_SCHEMA_VERSION}"
+            )
+        for field in COST_FIELDS:
+            if field not in entry:
+                problems.append(f"{where}: missing field {field!r}")
+            elif field in ABSORB_FIELDS:
+                sub = entry[field]
+                missing = [p for p in ABSORB_POLICIES if p not in sub] \
+                    if isinstance(sub, dict) else list(ABSORB_POLICIES)
+                if missing:
+                    problems.append(
+                        f"{where}: {field} missing policies {missing}"
+                    )
+                else:
+                    bad = [p for p in ABSORB_POLICIES
+                           if not (float(sub[p]) > 0.0)]
+                    if bad:
+                        problems.append(
+                            f"{where}: {field} non-positive for {bad}"
+                        )
+            elif not (float(entry[field]) >= 0.0):
+                problems.append(f"{where}: {field} must be >= 0")
+    if problems:
+        raise StaleConstantsError(
+            "stale/invalid cost constants — re-run `make calibrate`:\n  "
+            + "\n  ".join(problems)
+        )
+
+
+def load_cost_constants(backend: str | None = None) -> dict:
+    """The calibrated constants entry for ``backend`` (falling back to
+    the committed ``cpu`` defaults for uncalibrated backends)."""
+    from repro.core import _cost_constants as cc
+
+    validate_constants(cc.COST_CONSTANTS)
+    table = cc.COST_CONSTANTS
+    if backend in table:
+        return table[backend]
+    return table["cpu"]
+
+
+def _spill_fraction(policy: str, dup_rate: float) -> float:
+    """Fraction of absorbed rows the run-generation phase spills.  The
+    traditional sort spills every row; the deduplicating policies spill
+    only the rows their window fails to absorb (§3.5 first-order: the
+    duplicate fraction is absorbed)."""
+    d = min(1.0, max(0.0, dup_rate))
+    if policy == "traditional":
+        return 1.0
+    return 1.0 - d
+
+
+def policy_cost_per_row(
+    policy: str,
+    dup_rate: float,
+    *,
+    constants: dict | None = None,
+    backend: str | None = None,
+    merge_levels: int = 1,
+    input_sorted: bool = False,
+) -> float:
+    """Calibrated per-input-row cost (ns) of running the streamed
+    pipeline under ``policy`` at the given duplicate rate.
+
+    ``cost(d) = absorb + spill_frac(d) · (spill_write + merge · levels)``
+
+    ``input_sorted=True`` credits an upstream-established key order with
+    a zero sort term: the batch-sorting policies' absorb cost drops by
+    the measured ``sort_row_ns`` (an upstream :func:`repro.aggregate`
+    emits key-sorted relations, so re-sorting them is pure waste).
+    """
+    c = constants if constants is not None else load_cost_constants(backend)
+    d = min(1.0, max(0.0, dup_rate))
+    a0 = float(c["absorb_row_ns"][policy])
+    a1 = float(c["absorb_dup_row_ns"][policy])
+    absorb = a0 + d * (a1 - a0)
+    if input_sorted and policy in SORTING_POLICIES:
+        absorb = max(0.0, absorb - float(c["sort_row_ns"]))
+    per_spilled = float(c["spill_write_row_ns"]) + float(c["merge_row_ns"]) * max(
+        0, merge_levels
+    )
+    return absorb + _spill_fraction(policy, dup_rate) * per_spilled
+
+
+def choose_policy(
+    dup_rate: float,
+    *,
+    arms=("traditional", "early_agg", "rs"),
+    constants: dict | None = None,
+    backend: str | None = None,
+    merge_levels: int = 1,
+    input_sorted: bool = False,
+) -> str:
+    """argmin over ``arms`` of :func:`policy_cost_per_row` — the
+    decision the runtime governor re-evaluates mid-flight."""
+    c = constants if constants is not None else load_cost_constants(backend)
+    return min(
+        arms,
+        key=lambda p: policy_cost_per_row(
+            p, dup_rate, constants=c, merge_levels=merge_levels,
+            input_sorted=input_sorted,
+        ),
+    )
+
+
+def crossover_dup_rate(
+    a: str = "traditional",
+    b: str = "early_agg",
+    *,
+    constants: dict | None = None,
+    backend: str | None = None,
+    merge_levels: int = 1,
+    input_sorted: bool = False,
+) -> float:
+    """The duplicate rate at which policy ``b`` starts beating policy
+    ``a`` (clamped to [0, 1]).  With the default pair this is the fitted
+    machine-specific hash-vs-sort-style crossover surface: below it the
+    cheap-absorb policy wins, above it the deduplicating window pays for
+    itself."""
+    c = constants if constants is not None else load_cost_constants(backend)
+
+    def cost(p, d):
+        return policy_cost_per_row(
+            p, d, constants=c, merge_levels=merge_levels,
+            input_sorted=input_sorted,
+        )
+
+    # cost_p(d) is linear in d, so solve cost_a(d) == cost_b(d) exactly.
+    a0, a1 = cost(a, 0.0), cost(a, 1.0)
+    b0, b1 = cost(b, 0.0), cost(b, 1.0)
+    denom = (a1 - a0) - (b1 - b0)
+    if denom == 0.0:
+        return 0.0 if b0 <= a0 else 1.0
+    d = (b0 - a0) / denom
+    return min(1.0, max(0.0, d))
+
+
+def estimate_seconds(
+    policy: str,
+    n_rows: float,
+    dup_rate: float,
+    *,
+    constants: dict | None = None,
+    backend: str | None = None,
+    merge_levels: int = 1,
+    input_sorted: bool = False,
+) -> float:
+    """End-to-end predicted wall time for ``n_rows`` under ``policy``."""
+    return (
+        policy_cost_per_row(
+            policy, dup_rate, constants=constants, backend=backend,
+            merge_levels=merge_levels, input_sorted=input_sorted,
+        )
+        * n_rows
+        * 1e-9
+    )
+
+
+def cost_surface(
+    n_rows: float,
+    output_estimate: float,
+    *,
+    backend: str | None = None,
+    merge_levels: int = 1,
+    input_sorted: bool = False,
+) -> dict:
+    """The fitted decision surface, as surfaced in ``AggResult.plan``."""
+    c = load_cost_constants(backend)
+    d_est = 0.0
+    if n_rows > 0 and output_estimate > 0:
+        d_est = min(1.0, max(0.0, 1.0 - output_estimate / n_rows))
+    kw = dict(constants=c, merge_levels=merge_levels, input_sorted=input_sorted)
+    return {
+        "calibrated_backend": c["meta"].get("backend", "cpu")
+        if isinstance(c.get("meta"), dict) else "cpu",
+        "schema_version": c["schema_version"],
+        "input_sorted": input_sorted,
+        "estimated_dup_rate": d_est,
+        "crossover_dup_rate": crossover_dup_rate(**kw),
+        "policy_cost_ns_per_row": {
+            p: policy_cost_per_row(p, d_est, **kw)
+            for p in ("traditional", "early_agg", "rs")
+        },
+        "chosen_policy": choose_policy(d_est, **kw),
+    }
+
+
 def fig24_curves(
     I: float = 100e6, M: float = 100e3, F: int = 10, points: int = 25
 ):

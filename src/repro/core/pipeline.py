@@ -59,6 +59,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +73,7 @@ from repro.core.types import (
     AggState,
     DeviceSpillStats,
     ExecConfig,
+    MergeOverflowError,
     SpillStats,
     StreamEngineState,
     as_key_array,
@@ -87,6 +89,24 @@ from repro.core.types import (
 )
 
 POLICIES = ("traditional", "inrun_dedup", "early_agg", "rs")
+
+# The adaptive streaming mode: STREAM_POLICIES is what StreamingAggregator
+# accepts — "adaptive" runs the engine on the current arm's NATIVE
+# geometry (so holding an arm costs exactly what the fixed policy costs)
+# and lets a PolicyGovernor (repro.core.adaptive) switch the concrete
+# run-generation arm between super-batches; a switch flushes the tables
+# and re-shapes the state to the incoming arm's geometry (the run store
+# only ever ratchets wider — closed runs own their columns).
+STREAM_POLICIES = POLICIES + ("adaptive",)
+
+# Arms the governor may switch between.  inrun_dedup is never an arm: on
+# unique-heavy input it pays traditional's spill plus a useless segmented
+# combine, and on duplicate-heavy input early_agg's persistent M-row
+# window strictly beats its per-batch window — it cannot win either
+# regime.
+ADAPTIVE_ARMS = ("early_agg", "rs", "traditional")
+
+_log = logging.getLogger(__name__)
 
 # Trace-time log: every traced pipeline/stream program appends one entry
 # here.  Tests use it as a compile counter — a second call with a
@@ -160,6 +180,13 @@ def _engine_geometry(policy: str, M: int, B: int, P: int):
         return B, _round_up(M + B, P), M, 0
     if policy == "rs":
         return B, _round_up(2 * M + 2 * B, P), M + 2 * B, M + 2 * B
+    if policy == "adaptive":
+        # Adaptive streams STAGE chunks at unit-M granularity (re-shaped
+        # to the current arm's input unit at absorb time); the engine
+        # state itself lives at the current ARM's native geometry, with
+        # the slot width ratcheting up at switches (see _switch_reshape).
+        # The widest (rs) shape here is the staging unit + upper bound.
+        return M, _round_up(2 * M + 2 * B, P), M + 2 * B, M + 2 * B
     raise ValueError(f"unknown run-generation policy {policy!r}")
 
 
@@ -179,19 +206,38 @@ def _engine_init(policy: str, *, M: int, B: int, P: int, R: int, width: int,
         cursor=jnp.int32(0),
         ridx=jnp.int32(0),
         spilled=jnp.int32(0),
+        absorbed=jnp.int32(0),
+        dups=jnp.int32(0),
     )
+
+
+def _valid_rows(ck) -> jax.Array:
+    """Valid (non-EMPTY) input rows in one batch (int32 device scalar)."""
+    return jnp.sum(ck != empty_key(ck.dtype), dtype=jnp.int32)
 
 
 def _step_sortwrite(es: StreamEngineState, ck, cp, *, dedup: bool,
                     backend: str, ws) -> StreamEngineState:
     """``traditional`` / ``inrun_dedup``: one run per M-row batch, written
     to the carried run slot (EMPTY batches are no-ops)."""
+    valid = _valid_rows(ck)
     st = rows_to_state(ck, cp, widths=ws)
     if dedup:
         st = sorted_ops.absorb(st, backend=backend)
     else:
         st = sorted_ops.sort_state(st, backend=backend)
     occ = st.occupancy()
+    if dedup:
+        dups = valid - occ  # rows that combined within the batch
+    else:
+        # no combining happens, but the sorted batch still *observes* its
+        # duplicates: adjacent equal-key pairs (EMPTY pads sort last and
+        # never match a valid key, so no masking is needed beyond EMPTY)
+        k = st.keys
+        dups = jnp.sum(
+            (k[1:] == k[:-1]) & (k[1:] != empty_key(k.dtype)),
+            dtype=jnp.int32,
+        )
     R, C = es.run_slots, es.slot_rows
     slot = jnp.where(occ > 0, es.ridx, R)
     store = jax.tree.map(
@@ -202,6 +248,8 @@ def _step_sortwrite(es: StreamEngineState, ck, cp, *, dedup: bool,
         es, store=store, lens=lens,
         ridx=es.ridx + (occ > 0).astype(jnp.int32),
         spilled=es.spilled + occ,
+        absorbed=es.absorbed + valid,
+        dups=es.dups + dups,
     )
 
 
@@ -211,10 +259,13 @@ def _step_early_agg(es: StreamEngineState, ck, cp, *, M: int, backend: str,
     batch; when occupancy exceeds M the whole index content is written to
     the carried run slot and memory restarts empty."""
     R, C = es.run_slots, es.slot_rows
+    capT = es.table.capacity  # M for the fixed policy; M + 2B under adaptive
+    valid = _valid_rows(ck)
+    occ_before = es.table.occupancy()
     batch = sorted_ops.absorb(rows_to_state(ck, cp, widths=ws), backend=backend)
     merged = sorted_ops.merge_absorb(
         es.table, batch, backend=backend, assume_unique=True
-    )  # capacity M + B
+    )  # capacity capT + B
     occ = merged.occupancy()
     flush = occ > M
     # memory full: the entire index content becomes one sorted run in the
@@ -225,13 +276,15 @@ def _step_early_agg(es: StreamEngineState, ck, cp, *, M: int, backend: str,
         _pad_rows(merged, C),
     )
     lens = es.lens.at[slot].set(occ, mode="drop")
-    kept = jax.tree.map(lambda x: x[:M], merged)  # trim back to M
-    table0 = empty_like(es.table, M)
+    kept = jax.tree.map(lambda x: x[:capT], merged)  # trim to table capacity
+    table0 = empty_like(es.table, capT)
     table = jax.tree.map(lambda e, k: jnp.where(flush, e, k), table0, kept)
     return dataclasses.replace(
         es, table=table, store=store, lens=lens,
         ridx=es.ridx + flush.astype(jnp.int32),
         spilled=es.spilled + jnp.where(flush, occ, 0),
+        absorbed=es.absorbed + valid,
+        dups=es.dups + (valid - (occ - occ_before)),
     )
 
 
@@ -246,10 +299,16 @@ def _step_rs(es: StreamEngineState, ck, cp, *, M: int, B: int, backend: str,
     C = es.slot_rows
     cap = es.table.capacity  # M + 2B
     arB = jnp.arange(B, dtype=jnp.int32)
+    valid = _valid_rows(ck)
+    occ_before = es.table.occupancy() + es.table2.occupancy()
     batch = sorted_ops.absorb(rows_to_state(ck, cp, widths=ws), backend=backend)
     rt, nt = rg.rs_split_absorb(es.table, es.table2, es.frontier, batch,
                                 backend=backend)
-    es = dataclasses.replace(es, table=rt, table2=nt)
+    dups = valid - (rt.occupancy() + nt.occupancy() - occ_before)
+    es = dataclasses.replace(
+        es, table=rt, table2=nt,
+        absorbed=es.absorbed + valid, dups=es.dups + dups,
+    )
 
     def close_fn(s):
         # the open run is exhausted (or its slot is full): record its
@@ -390,13 +449,20 @@ def _stream_run_slots(policy: str, n_pad: int, M: int) -> int:
     (and grow) the store with zero device readbacks."""
     if policy in ("traditional", "inrun_dedup"):
         return max(1, n_pad // M)  # one run per M-row batch
+    if policy == "adaptive":
+        # worst arm mix: the traditional arm writes one run per M-row
+        # batch, and each mid-flight switch can close at most two extra
+        # (< M-row) runs — those are re-anchored into _base_slots at
+        # switch time, so the rolling bound only needs the rs finish
+        # slack on top of input-over-memory.
+        return max(1, n_pad // M) + 4
     return _slots_for(n_pad, M, 2 if policy == "early_agg" else 4)
 
 
 def _static_run_slots(policy: str, n: int, M: int, B: int) -> int:
     """Run-slot bound from shapes alone (host-side twin of the sizing in
     :func:`_pipeline_body`, used to plan pre-merge levels statically)."""
-    chunk = M if policy in ("traditional", "inrun_dedup") else B
+    chunk = _engine_geometry(policy, M, B, 1)[0]
     return _stream_run_slots(policy, _num_batches(n, chunk) * chunk, M)
 
 
@@ -880,7 +946,7 @@ def insort_aggregate_device(
 
 
 def _absorb_chunk_body(es, bk, bp, *, policy, memory_rows, batch_rows,
-                       backend, widths, local_slots):
+                       backend, widths, local_slots, with_obs=False):
     TRACE_LOG.append(("absorb", policy, tuple(bk.shape), es.run_slots))
     # The scan carries only a LOCAL window of the run store — the slots
     # this chunk can actually reach (its exact run bound + the open
@@ -907,7 +973,7 @@ def _absorb_chunk_body(es, bk, bp, *, policy, memory_rows, batch_rows,
                             B=batch_rows, backend=backend, ws=widths), None
 
     loc, _ = jax.lax.scan(body, loc, (bk, bp))
-    return dataclasses.replace(
+    es = dataclasses.replace(
         loc,
         store=jax.tree.map(
             lambda a, l: jax.lax.dynamic_update_slice_in_dim(
@@ -917,12 +983,20 @@ def _absorb_chunk_body(es, bk, bp, *, policy, memory_rows, batch_rows,
                                                  axis=0),
         ridx=ridx0 + loc.ridx,
     )
+    if not with_obs:
+        return es
+    # adaptive streams get the governor's decision scalars as an extra
+    # output of the SAME program: a separate _observe dispatch would hold
+    # a pending read on the engine buffers and force the next (donating)
+    # absorb into a defensive copy of the whole state — folded in here,
+    # donation stays clean and the observation is free.
+    return es, _observe_body(es)
 
 
 _absorb_chunk = jax.jit(
     _absorb_chunk_body, donate_argnums=(0,),
     static_argnames=("policy", "memory_rows", "batch_rows", "backend",
-                     "widths", "local_slots"),
+                     "widths", "local_slots", "with_obs"),
 )
 
 
@@ -1117,6 +1191,123 @@ _evict_compact = jax.jit(
 )
 
 
+# ---------------------------------------------------------------------------
+# adaptive streaming: observation readback + the policy-transition program
+# ---------------------------------------------------------------------------
+
+
+def _observe_body(es: StreamEngineState):
+    """The decision scalars the adaptive governor steers on, packed into
+    ONE int32 vector so the amortized readback is a single small
+    transfer: (rows absorbed, duplicate encounters, rows spilled,
+    resident table occupancy, run slots used)."""
+    TRACE_LOG.append(("observe", es.run_slots))
+    occ_t = es.table.occupancy() + es.table2.occupancy()
+    return jnp.stack([es.absorbed, es.dups, es.spilled, occ_t, es.ridx])
+
+
+_observe = jax.jit(_observe_body)
+
+
+def _switch_flush_body(es: StreamEngineState, *, policy: str,
+                       backend: str) -> StreamEngineState:
+    """Close out the CURRENT policy arm so the next chunk can be absorbed
+    under a different one: close the open replacement-selection run (rs
+    only), then flush the resident table content as one closed sorted run
+    and reset the tables/frontier/cursor to their fresh state.
+
+    This is what makes mid-flight switching legal: after the transition
+    every arm sees exactly the state it would after its own ``init`` —
+    empty tables, closed sorted runs in the store — and the finalize
+    merge is policy-agnostic over the store (each arm's runs are sorted;
+    the wide merge aggregates across and within runs)."""
+    TRACE_LOG.append(("switch", policy, es.run_slots))
+    R, C = es.run_slots, es.slot_rows
+    if policy == "rs":
+        # close the open run at its current cursor (no-op when cursor==0)
+        lens = es.lens.at[jnp.where(es.cursor > 0, es.ridx, R)].set(
+            es.cursor, mode="drop"
+        )
+        ridx = es.ridx + (es.cursor > 0).astype(jnp.int32)
+        # collapse both partitions into one sorted resident table (the
+        # run/next distinction is meaningless once the run is closed)
+        cap = es.table.capacity
+        merged = jax.tree.map(
+            lambda x: x[:cap],
+            sorted_ops.merge_absorb(es.table, es.table2, backend=backend,
+                                    assume_unique=True),
+        )
+        es = dataclasses.replace(
+            es, table=merged, table2=empty_like(es.table2, es.table2.capacity),
+            frontier=jnp.zeros((), es.frontier.dtype), lens=lens,
+            cursor=jnp.int32(0), ridx=ridx,
+        )
+    if es.table.capacity:
+        # flush the resident (sorted, unique) table as one closed run
+        occ = es.table.occupancy()
+        slot = jnp.where(occ > 0, es.ridx, R)
+        store = jax.tree.map(
+            lambda d, s: d.at[slot].set(s, mode="drop"), es.store,
+            _pad_rows(es.table, C),
+        )
+        lens = es.lens.at[slot].set(occ, mode="drop")
+        es = dataclasses.replace(
+            es, store=store, lens=lens,
+            ridx=es.ridx + (occ > 0).astype(jnp.int32),
+            spilled=es.spilled + occ,
+            table=empty_like(es.table, es.table.capacity),
+        )
+    return es
+
+
+# donated: the transition rewrites the state in place (same shapes), so
+# back-to-back switch → absorb reuses the engine buffers
+_switch_flush = jax.jit(
+    _switch_flush_body, static_argnames=("policy", "backend"),
+    donate_argnums=(0,),
+)
+
+
+def _switch_reshape_body(es: StreamEngineState, *, slot_rows, capT, capT2,
+                         width, widths):
+    """Re-shape a just-flushed engine state to the incoming arm's NATIVE
+    geometry.  The tables are empty after :func:`_switch_flush_body`, so
+    they are simply re-allocated at the new capacities; the run store
+    only ever RATCHETS wider (closed runs own their columns, narrowing
+    could drop rows) — every slot's rows are left-packed with EMPTY
+    tails, so splicing the old store into a fresh wider empty one
+    preserves the per-slot invariant.
+
+    Keeping each arm on its native shapes is what makes an adaptive
+    stream that holds one arm run the exact per-chunk programs the fixed
+    policy runs — no wide-geometry tax on the steady state; only an
+    actual switch pays this (one state copy)."""
+    TRACE_LOG.append(("reshape", slot_rows, capT, capT2))
+    kd = es.store.keys.dtype
+    ws = widths if widths is not None else (width, width, width)
+    store = es.store
+    if slot_rows != es.slot_rows:
+        empty = _stacked_empty(es.run_slots, slot_rows, width,
+                               key_dtype=kd, widths=ws)
+        store = jax.tree.map(
+            lambda e, a: jax.lax.dynamic_update_slice(e, a, (0,) * e.ndim),
+            empty, store)
+    return dataclasses.replace(
+        es,
+        table=empty_state(capT, width, key_dtype=kd, widths=ws),
+        table2=empty_state(capT2, width, key_dtype=kd, widths=ws),
+        store=store,
+    )
+
+
+# no donation: the reshaped state's buffer shapes differ from the input's
+# so XLA could not alias them anyway — switches are rare (one copy each)
+_switch_reshape = jax.jit(
+    _switch_reshape_body,
+    static_argnames=("slot_rows", "capT", "capT2", "width", "widths"),
+)
+
+
 @dataclasses.dataclass
 class StagedChunk:
     """A super-batch already on device: ``jax.device_put`` was dispatched
@@ -1163,6 +1354,21 @@ class StreamingAggregator:
     engine under ``shard_map``; finalize then runs the key-range exchange
     + per-owner merge of the one-shot sharded pipeline, returning a
     globally (owner, key)-sorted state and cross-shard-reduced stats.
+
+    ``policy="adaptive"`` keeps the engine state at the current arm's
+    NATIVE geometry (a switch re-shapes it — tables re-allocated, the
+    run store ratcheting wider only) and lets a
+    :class:`repro.core.adaptive.PolicyGovernor` pick the concrete
+    run-generation arm (early_agg / rs / traditional) from the engine's
+    own observed duplicate rate: every ``k``-th chunk the
+    host reads ONE small decision vector back (an explicit
+    ``jax.device_get`` — legal under ``jax.transfer_guard("disallow")``)
+    and may dispatch a policy-transition program before the next absorb.
+    The zero-readback contract relaxes to **O(stream/k) scalar
+    readbacks**, counted in ``readbacks_paid`` and surfaced via
+    ``SpillStats``.  Adaptive mode requires ``mesh=None`` and
+    ``memory_rows % batch_rows == 0`` (chunks are staged at unit-M
+    granularity and re-shaped per arm).
     """
 
     def __init__(
@@ -1179,11 +1385,12 @@ class StreamingAggregator:
         output_rows: int | None = None,
         mesh=None,
         mesh_axis: str | None = None,
+        governor=None,
     ):
         cfg = cfg or ExecConfig()
-        if policy not in POLICIES:
+        if policy not in STREAM_POLICIES:
             raise ValueError(
-                f"unknown policy {policy!r}; expected one of {POLICIES}"
+                f"unknown policy {policy!r}; expected one of {STREAM_POLICIES}"
             )
         self.cfg = cfg
         self.policy = policy
@@ -1227,6 +1434,41 @@ class StreamingAggregator:
         self._retired = None  # created device-side by the first evict
         self._base_slots = 0  # live closed runs (+ slack) at the baseline
         self._rows_since_evict = 0  # padded rows absorbed since baseline
+        # adaptive-mode extras (inert for fixed policies): the concrete
+        # run-generation arm the next absorb uses, the governor steering
+        # it, and the observation/switch accounting.
+        self.policy_events: list[dict] = []
+        self.readbacks_paid = 0
+        self._chunks_absorbed = 0
+        self._last_dup_rate = 0.0
+        self._pending_obs = None  # boundary observation awaiting harvest
+        self._last_obs_vec = None  # newest boundary-chunk observation
+        if policy == "adaptive":
+            if mesh is not None:
+                raise ValueError(
+                    "policy='adaptive' does not compose with mesh= yet — "
+                    "pick a fixed policy for sharded streams"
+                )
+            if cfg.memory_rows % cfg.batch_rows:
+                raise ValueError(
+                    "policy='adaptive' needs memory_rows divisible by "
+                    f"batch_rows (chunks are staged at unit-M granularity "
+                    f"and re-shaped per arm), got M={cfg.memory_rows} "
+                    f"B={cfg.batch_rows}"
+                )
+            from repro.core import adaptive as adaptive_mod
+
+            self._governor = (governor if isinstance(
+                governor, adaptive_mod.PolicyGovernor)
+                else adaptive_mod.PolicyGovernor(cfg, config=governor))
+            # the engine state is created lazily at the first absorb, at
+            # THIS arm's native geometry — not at a one-size-fits-all
+            # wide shape (see _switch_reshape for the switch-time cost)
+            self._arm = self._governor.start_arm(
+                output_estimate=output_estimate)
+        else:
+            self._governor = None
+            self._arm = policy
 
     # -- staging ---------------------------------------------------------
 
@@ -1295,8 +1537,13 @@ class StreamingAggregator:
 
     def _local_slots(self, chunk_padded: int) -> int:
         """Run slots one chunk can reach: its exact bound + the open slot
-        (the absorb scan carries only this window of the store)."""
-        return self._bound(chunk_padded) + 1
+        (the absorb scan carries only this window of the store).
+        Adaptive streams size the window for the CURRENT arm — the
+        traditional arm's unit-M chunk reaches 2 slots, not the
+        conservative arm-mix bound the cumulative schedule uses."""
+        arm = self._arm if self.policy == "adaptive" else self.policy
+        return _stream_run_slots(arm, chunk_padded // self.world,
+                                 self.cfg.memory_rows) + 1
 
     def _bound_total(self, rows_since_baseline: int) -> int:
         """Slot bound honouring the eviction baseline: live runs present
@@ -1329,8 +1576,10 @@ class StreamingAggregator:
             if self._es is None:
                 self._R = needed
                 if self.mesh is None:
+                    # adaptive: init at the START ARM's native geometry
+                    # (self._arm == self.policy for fixed streams)
                     self._es = _engine_init_jit(
-                        policy=self.policy,
+                        policy=self._arm,
                         memory_rows=self.cfg.memory_rows,
                         batch_rows=self.cfg.batch_rows,
                         page_rows=self.cfg.page_rows, run_slots=needed,
@@ -1346,23 +1595,167 @@ class StreamingAggregator:
                 else:
                     self._es = self._fns.grow(needed)(self._es)
             if self.mesh is None:
-                self._es = _absorb_chunk(
-                    self._es, staged.bk, staged.bp, policy=self.policy,
+                bk, bp = staged.bk, staged.bp
+                arm_chunk = _engine_geometry(
+                    self._arm, self.cfg.memory_rows, self.cfg.batch_rows,
+                    self.cfg.page_rows)[0]
+                if arm_chunk != bk.shape[-1]:
+                    # adaptive: chunks are staged at unit-M granularity;
+                    # re-batch (a device-side reshape, no transfer) to the
+                    # current arm's input granularity.  The batch count is
+                    # spelled out because a width-0 payload has zero
+                    # elements and cannot infer a -1 dimension.
+                    t_arm = bk.shape[0] * (bk.shape[-1] // arm_chunk)
+                    bk = bk.reshape(t_arm, arm_chunk)
+                    bp = bp.reshape(t_arm, arm_chunk, bp.shape[-1])
+                # the observation vector is only harvested at governor
+                # boundaries (every k-th chunk), so only the absorb that
+                # completes an interval pays for emitting it — the other
+                # k-1 chunks run the same program a fixed-policy stream
+                # does (two jit cache entries per arm, not 2x compiles
+                # per chunk)
+                want_obs = (
+                    self._governor is not None
+                    and (self._chunks_absorbed + 1)
+                    % self._governor.interval == 0
+                )
+                out = _absorb_chunk(
+                    self._es, bk, bp, policy=self._arm,
                     memory_rows=self.cfg.memory_rows,
                     batch_rows=self.cfg.batch_rows, backend=self.backend,
                     widths=self.widths, local_slots=local,
+                    with_obs=want_obs,
                 )
+                if want_obs:
+                    self._es, self._last_obs_vec = out
+                else:
+                    self._es = out
             else:
                 self._es = self._fns.absorb(local)(
                     self._es, staged.bk, staged.bp)
         self.rows_seen += staged.rows
         self.rows_padded += staged.rows_padded
         self._rows_since_evict += staged.rows_padded
+        self._chunks_absorbed += 1
+        if (self._governor is not None
+                and self._chunks_absorbed % self._governor.interval == 0):
+            self._maybe_adapt()
 
     def absorb(self, keys, payload=None) -> None:
         """stage + absorb in one call (no overlap — prefer the staged
         protocol or :func:`aggregate_device_stream` for throughput)."""
         self.absorb_staged(self.stage(keys, payload))
+
+    # -- adaptive policy switching ----------------------------------------
+
+    @property
+    def arm(self) -> str:
+        """The concrete run-generation policy the next absorb will use
+        (== ``policy`` for fixed-policy streams)."""
+        return self._arm
+
+    def observe(self):
+        """Read the engine's decision scalars back (ONE explicit
+        ``jax.device_get`` of a 5-int vector — counted in
+        ``readbacks_paid``).  Returns a
+        :class:`repro.core.adaptive.Observation`."""
+        from repro.core import adaptive as adaptive_mod
+
+        if self._es is None:
+            return adaptive_mod.Observation(0, 0, 0, 0, 0)
+        with key_dtype_context(self.key_dtype):
+            vec = jax.device_get(_observe(self._es))
+        self.readbacks_paid += 1
+        return adaptive_mod.Observation(
+            rows_absorbed=int(vec[0]), dup_rows=int(vec[1]),
+            rows_spilled=int(vec[2]), table_rows=int(vec[3]),
+            run_slots_used=int(vec[4]),
+        )
+
+    def _maybe_adapt(self) -> None:
+        """Governor boundary: harvest the observation that rode out of
+        the PREVIOUS boundary's absorb (its chunk retired an interval
+        ago, so the explicit ``device_get`` returns without draining the
+        dispatch queue), keep this boundary's for the next one, and ask
+        the governor for the next arm.  Pipelining the readback costs
+        the governor one interval of decision lag but keeps the ingest
+        loop free of host→device sync bubbles; only an actual switch
+        pays a fresh synchronous :meth:`observe` (its slot re-anchor
+        needs the current high-water mark, not the lagged one)."""
+        from repro.core import adaptive as adaptive_mod
+
+        pending = self._pending_obs
+        self._pending_obs = self._last_obs_vec
+        if pending is None:
+            return  # first boundary: the observation pipeline is priming
+        vec = jax.device_get(pending)
+        self.readbacks_paid += 1
+        obs = adaptive_mod.Observation(
+            rows_absorbed=int(vec[0]), dup_rows=int(vec[1]),
+            rows_spilled=int(vec[2]), table_rows=int(vec[3]),
+            run_slots_used=int(vec[4]),
+        )
+        self._last_dup_rate = obs.duplicate_rate
+        nxt = self._governor.decide(obs, current=self._arm)
+        if nxt != self._arm:
+            obs_now = self.observe()  # fresh + synchronous, counted
+            self._last_dup_rate = obs_now.duplicate_rate
+            self._switch_arm(nxt, obs_now)
+
+    def _switch_arm(self, to: str, obs) -> None:
+        """Transition the engine to arm ``to``: close the open rs run,
+        flush the resident tables as one closed run (a donated in-place
+        program), re-shape the state to ``to``'s native geometry (tables
+        re-allocated at the new capacity, store ratcheted wider if
+        needed), and re-anchor the host's run-slot accounting at the
+        observed high-water mark (the flushed runs can carry < M rows,
+        so input-over-memory alone no longer bounds the slot count)."""
+        with key_dtype_context(self.key_dtype):
+            self._es = _switch_flush(self._es, policy=self._arm,
+                                     backend=self.backend)
+            _, C_to, capT_to, capT2_to = _engine_geometry(
+                to, self.cfg.memory_rows, self.cfg.batch_rows,
+                self.cfg.page_rows)
+            C_new = max(C_to, self._es.slot_rows)
+            if (C_new != self._es.slot_rows
+                    or capT_to != self._es.table.capacity
+                    or capT2_to != self._es.table2.capacity):
+                self._es = _switch_reshape(
+                    self._es, slot_rows=C_new, capT=capT_to,
+                    capT2=capT2_to, width=self.width, widths=self.widths)
+        self.policy_events.append({
+            "rows_seen": self.rows_seen,
+            "from": self._arm,
+            "to": to,
+            "duplicate_rate": round(obs.duplicate_rate, 4),
+        })
+        self._arm = to
+        # observed ridx + ≤2 transition runs + the rs finish slack
+        self._base_slots = int(obs.run_slots_used) + 2 + 4
+        self._rows_since_evict = 0
+        self._pending_obs = None  # observed the pre-flush state: stale
+        self._last_obs_vec = None
+
+    def _patch_stats(self, stats: SpillStats) -> SpillStats:
+        """Surface the adaptive observation block on the host stats.
+        Fixed-policy streams that never observed return ``stats``
+        unchanged, preserving exact as_dict parity with the one-shot
+        pipeline."""
+        if self._governor is None and not self.readbacks_paid:
+            return stats
+        return dataclasses.replace(
+            stats,
+            duplicate_rate=self._last_dup_rate,
+            policy_switches=len(self.policy_events),
+            readbacks_paid=self.readbacks_paid,
+        )
+
+    def wait(self) -> None:
+        """Block until every dispatched absorb/switch has completed on
+        device (benchmark phase boundaries; never needed for
+        correctness)."""
+        if self._es is not None:
+            jax.block_until_ready(jax.tree.leaves(self._es))
 
     # -- finalizing ------------------------------------------------------
 
@@ -1384,11 +1777,41 @@ class StreamingAggregator:
         es, self._es = self._es, None
         return self._run_merge(es, pre, out_cap, trim)
 
+    def _retry_capacity(self, entry_point: str, err: Exception, es,
+                        pre: int, out_cap: int, trim: int):
+        """The wide merge dropped rows: re-run the (non-donating) merge
+        program ONCE with the output capacity at the next pow2 and one
+        more pre-merge level (fewer, bigger runs also shrink the merge
+        index's resident width).  Loud by design; a second overflow
+        propagates."""
+        out_cap2 = _pow2_ceil(out_cap + 1)
+        _log.warning(
+            "%s overflowed its out_capacity=%d (%s); retrying once at "
+            "out_capacity=%d with %d pre-merge levels",
+            entry_point, out_cap, err, out_cap2, pre + 1,
+        )
+        state, dstats = self._run_merge(es, pre + 1, out_cap2, trim)
+        return state, dstats.finalize(entry_point=entry_point)
+
     def finalize(self) -> tuple[AggState, SpillStats]:
         """:meth:`finalize_device` + the ONE host readback of spill stats
-        (raises loudly on run-buffer overflow / dropped merge rows)."""
-        state, dstats = self.finalize_device()
-        return state, dstats.finalize()
+        (raises loudly on run-buffer overflow; a merge-output overflow is
+        retried once at the next pow2 capacity before raising)."""
+        if self._finalized:
+            raise RuntimeError("StreamingAggregator already finalized")
+        if self._es is None:  # nothing absorbed: empty result
+            state, dstats = self.finalize_device()
+            return state, self._patch_stats(dstats.finalize())
+        pre, out_cap, trim = self._merge_plan(bucketed=False)
+        es, self._es = self._es, None
+        self._finalized = True
+        state, dstats = self._run_merge(es, pre, out_cap, trim)
+        try:
+            stats = dstats.finalize()
+        except MergeOverflowError as e:
+            state, stats = self._retry_capacity(
+                "finalize", e, es, pre, out_cap, trim)
+        return state, self._patch_stats(stats)
 
     # -- merge-on-read snapshots + eviction (the service protocol) -------
 
@@ -1420,7 +1843,7 @@ class StreamingAggregator:
         with key_dtype_context(self.key_dtype):
             if self.mesh is None:
                 return _finalize_stream(
-                    es, self._retired, policy=self.policy,
+                    es, self._retired, policy=self._arm,
                     page_rows=self.cfg.page_rows, index_rows=self.index_rows,
                     fanin=self.cfg.fanin, premerge_levels=pre,
                     backend=self.backend, out_capacity=out_cap, trim=trim,
@@ -1456,9 +1879,17 @@ class StreamingAggregator:
 
     def snapshot(self) -> tuple[AggState, SpillStats]:
         """:meth:`snapshot_device` + the host readback of spill stats
-        (overflow errors name the snapshot entry point)."""
+        (overflow errors name the snapshot entry point; a merge-output
+        overflow is retried once at the next pow2 capacity — legal
+        because the snapshot program never consumes the live state)."""
         state, dstats = self.snapshot_device()
-        return state, dstats.finalize(entry_point="snapshot")
+        try:
+            stats = dstats.finalize(entry_point="snapshot")
+        except MergeOverflowError as e:
+            pre, out_cap, trim = self._merge_plan(bucketed=True)
+            state, stats = self._retry_capacity(
+                "snapshot", e, self._es, pre, out_cap, trim)
+        return state, self._patch_stats(stats)
 
     def evict_below(self, threshold) -> int:
         """Retire every resident row whose key is ``< threshold`` from
@@ -1507,7 +1938,7 @@ class StreamingAggregator:
                 )(self._es, thr_dev, *args)
                 new_ridx = int(ridx_max)
         slack = {"traditional": 0, "inrun_dedup": 0,
-                 "early_agg": 2, "rs": 4}[self.policy]
+                 "early_agg": 2, "rs": 4, "adaptive": 6}[self.policy]
         self._base_slots = new_ridx + slack
         self._rows_since_evict = 0
         return int(np.sum(np.asarray(self._retired)))
@@ -1580,6 +2011,7 @@ def aggregate_device_stream(
     super_batch_rows: int | None = None,
     mesh=None,
     mesh_axis: str | None = None,
+    governor=None,
 ) -> tuple[AggState, DeviceSpillStats]:
     """The streamed, double-buffered twin of :func:`aggregate_device`:
     aggregate an input that never needs to be device- (or even host-)
@@ -1611,6 +2043,46 @@ def aggregate_device_stream(
     policy.
     """
     cfg = cfg or ExecConfig()
+    agg, stream = _stream_setup(
+        chunks, cfg, policy=policy, backend=backend, widths=widths,
+        key_dtype=key_dtype, width=width, index_rows=index_rows,
+        output_estimate=output_estimate, output_rows=output_rows,
+        super_batch_rows=super_batch_rows, mesh=mesh, mesh_axis=mesh_axis,
+        governor=governor,
+    )
+    if agg is None:  # empty stream
+        return stream
+    staged = None
+    for keys, payload in stream:
+        nxt = agg.stage(keys, payload)  # H2D of k+1 in flight while …
+        if staged is not None:
+            agg.absorb_staged(staged)  # … the device absorbs chunk k
+        staged = nxt
+    agg.absorb_staged(staged)
+    return agg.finalize_device()
+
+
+def _stream_setup(
+    chunks,
+    cfg: ExecConfig,
+    *,
+    policy: str = "rs",
+    backend: str = "auto",
+    widths=None,
+    key_dtype=None,
+    width=None,
+    index_rows=None,
+    output_estimate=None,
+    output_rows=None,
+    super_batch_rows=None,
+    mesh=None,
+    mesh_axis=None,
+    governor=None,
+):
+    """Shared stream-driver setup: peek the first non-empty chunk to fix
+    the schema, build the aggregator.  Returns ``(agg, stream)``; for an
+    empty stream ``agg`` is None and ``stream`` is the empty
+    ``(state, DeviceSpillStats)`` result."""
     it = iter(chunks)
     first = None
     for c in it:
@@ -1622,7 +2094,7 @@ def aggregate_device_stream(
         kd = np.dtype(key_dtype or np.uint32)
         w = int(width or 0)
         with key_dtype_context(kd):
-            return (
+            return None, (
                 empty_state(0, w, key_dtype=kd, widths=widths),
                 DeviceSpillStats.zeros(),
             )
@@ -1641,23 +2113,35 @@ def aggregate_device_stream(
         cfg, policy=policy, key_dtype=key_dtype, width=width, widths=widths,
         backend=backend, index_rows=index_rows,
         output_estimate=output_estimate, output_rows=output_rows,
-        mesh=mesh, mesh_axis=mesh_axis,
+        mesh=mesh, mesh_axis=mesh_axis, governor=governor,
     )
-    staged = None
-    for keys, payload in stream:
-        nxt = agg.stage(keys, payload)  # H2D of k+1 in flight while …
-        if staged is not None:
-            agg.absorb_staged(staged)  # … the device absorbs chunk k
-        staged = nxt
-    agg.absorb_staged(staged)
-    return agg.finalize_device()
+    return agg, stream
 
 
 def insort_aggregate_device_stream(
     chunks, cfg: ExecConfig | None = None, **kw
 ) -> tuple[AggState, SpillStats]:
     """:func:`aggregate_device_stream` + the one host readback of spill
-    stats — the streamed twin of :func:`insort_aggregate_device`."""
+    stats — the streamed twin of :func:`insort_aggregate_device`.
+
+    ``policy="adaptive"`` streams cannot use this one-dispatch form's
+    device-only return (the governor needs its periodic readbacks
+    anyway), so they are driven through the same loop but finalized with
+    the retrying host path and observation-annotated stats."""
+    if kw.get("policy") == "adaptive":
+        cfg = cfg or ExecConfig()
+        agg, stream = _stream_setup(chunks, cfg, **kw)
+        if agg is None:  # empty stream
+            state, dstats = stream
+            return state, dstats.finalize()
+        staged = None
+        for keys, payload in stream:
+            nxt = agg.stage(keys, payload)
+            if staged is not None:
+                agg.absorb_staged(staged)
+            staged = nxt
+        agg.absorb_staged(staged)
+        return agg.finalize()
     state, dstats = aggregate_device_stream(chunks, cfg, **kw)
     return state, dstats.finalize()
 
@@ -1708,6 +2192,7 @@ def _mesh_stream_fns(
     state_spec = StreamEngineState(
         table=agg_spec, table2=agg_spec, frontier=P(axis), store=store_spec,
         lens=P(axis), cursor=P(axis), ridx=P(axis), spilled=P(axis),
+        absorbed=P(axis), dups=P(axis),
     )
     n_stats = len(dataclasses.fields(DeviceSpillStats))
 

@@ -329,12 +329,25 @@ def _resolve_order_by(order_by, by: KeySpec) -> bool:
     return True
 
 
-def _plan(n_rows: int, cfg: ExecConfig, output_estimate: int | None) -> dict:
+def _plan(
+    n_rows: int,
+    cfg: ExecConfig,
+    output_estimate: int | None,
+    *,
+    input_sorted: bool = False,
+) -> dict:
     """Optimizer-style cost comparison (paper Fig 23/24): predicted spill
-    volumes for the in-sort operator and the hash baseline.  The paper's
-    point — and this function's — is that in-sort aggregation is never
-    worse, so ``algorithm="auto"`` is always in-sort; the numbers are
-    surfaced for inspection."""
+    volumes for the in-sort operator and the hash baseline, plus the
+    machine-calibrated decision surface (``make calibrate``).  The
+    paper's point — and this function's — is that in-sort aggregation is
+    never worse in *volume*, so ``algorithm="auto"`` is always in-sort;
+    WHICH in-sort run-generation policy wins in *seconds* is what the
+    calibrated surface (and, streamed, the runtime governor) decides.
+
+    ``input_sorted=True`` credits a key order an upstream
+    :func:`aggregate` already established: the sort term of the
+    predicted cost is zero (sorting an already-sorted relation is pure
+    waste — the ROADMAP's order-enforcement item)."""
     O = output_estimate or cfg.memory_rows * cfg.fanin
     insort_cb = cost_model.simulate_insort(
         n_rows, O, cfg.memory_rows, cfg.fanin,
@@ -343,12 +356,21 @@ def _plan(n_rows: int, cfg: ExecConfig, output_estimate: int | None) -> dict:
     hash_cb = cost_model.simulate_hash(
         n_rows, O, cfg.memory_rows, cfg.fanin, hybrid=True
     )
+    levels = max(1, cost_model.merge_levels_insort(O, cfg.memory_rows,
+                                                   cfg.fanin))
+    import jax  # the constants table is keyed by device backend
+
     return {
         "input_rows": n_rows,
         "output_estimate": O,
         "in_memory": n_rows <= cfg.memory_rows,
+        "input_sorted": input_sorted,
         "predicted_spill_insort": insort_cb.total_spill,
         "predicted_spill_hash": hash_cb.total_spill,
+        "cost_model": cost_model.cost_surface(
+            n_rows, O, backend=jax.default_backend(), merge_levels=levels,
+            input_sorted=input_sorted,
+        ),
     }
 
 
@@ -363,6 +385,7 @@ def aggregate(
     backend: str = "auto",
     cfg: ExecConfig | None = None,
     output_estimate: int | None = None,
+    input_sorted: bool = False,
     pipeline: str = "device",
     mesh=None,
     mesh_axis: str | None = None,
@@ -391,8 +414,21 @@ def aggregate(
 
     ``algorithm``: ``"auto"`` (the paper's systems-only choice: in-sort),
     ``"insort"``, ``"hash"``, ``"f1_hash"``, ``"sort_then_stream"``, or
-    ``"inmemory"``.  ``backend``: ``"auto" | "xla" | "pallas"`` through
-    the dispatch registry.
+    ``"inmemory"``.  Streamed input additionally accepts (and defaults
+    to, where the geometry allows) ``"adaptive"``: the in-sort pipeline
+    with the run-generation policy re-decided mid-flight by the
+    calibrated policy governor (:mod:`repro.core.adaptive`).
+    ``backend``: ``"auto" | "xla" | "pallas"`` through the dispatch
+    registry.
+
+    ``input_sorted=True`` asserts the input already arrives in key
+    order (e.g. the relation came out of an upstream ``aggregate`` —
+    its results are key-sorted by construction); the plan's calibrated
+    cost surface then credits a zero sort term.
+
+    ``output_estimate`` sizes the result buffers; if the output
+    overruns them anyway, finalize retries ONCE at the next power of
+    two (with one more pre-merge level) before raising.
 
     With the default ``pipeline="device"``, the in-sort algorithms
     compile to ONE device program — run generation as a ``lax.scan``
@@ -423,8 +459,14 @@ def aggregate(
         return _aggregate_stream(
             columns, by=by, values=values, aggs=aggs, order_by=order_by,
             algorithm=algorithm, backend=backend, cfg=cfg,
-            output_estimate=output_estimate, pipeline=pipeline,
-            mesh=mesh, mesh_axis=mesh_axis,
+            output_estimate=output_estimate, input_sorted=input_sorted,
+            pipeline=pipeline, mesh=mesh, mesh_axis=mesh_axis,
+        )
+    if algorithm == "adaptive":
+        raise ValueError(
+            "algorithm='adaptive' adapts mid-stream — it needs streamed "
+            "input (pass an iterator of column batches); one-shot input "
+            "is planned up front with algorithm='auto'"
         )
     packed = by.pack(columns)
     want_sorted = _resolve_order_by(order_by, by)
@@ -442,7 +484,7 @@ def aggregate(
             raise ValueError(
                 f"aggregates {aggs.names} need a payload; pass values=..."
             )
-    plan = _plan(len(packed), cfg, output_estimate)
+    plan = _plan(len(packed), cfg, output_estimate, input_sorted=input_sorted)
     backend = dispatch.resolve_backend_name(backend)
     plan["backend"] = backend
 
@@ -499,6 +541,7 @@ def _aggregate_stream(
     backend: str,
     cfg: ExecConfig,
     output_estimate: int | None,
+    input_sorted: bool,
     pipeline: str,
     mesh,
     mesh_axis: str | None,
@@ -509,12 +552,28 @@ def _aggregate_stream(
     ``values`` is a column name) one float value column.  Batches are
     packed host-side one at a time and fed to the double-buffered
     streamed device pipeline — host→device transfer of batch k+1 overlaps
-    the device aggregating batch k, and only the finalize syncs."""
-    if algorithm not in ("auto", "insort"):
+    the device aggregating batch k, and only the finalize syncs.
+
+    ``algorithm="auto"`` runs ``"adaptive"`` where the geometry allows
+    (single device, ``memory_rows`` divisible by ``batch_rows``): the
+    run-generation policy is re-decided mid-flight by the calibrated
+    governor, so a wrong up-front estimate costs one observation window,
+    not the stream.  ``"insort"`` keeps the fixed default policy."""
+    if algorithm not in ("auto", "insort", "adaptive"):
         raise ValueError(
             f"streamed input runs the in-sort device pipeline only, got "
             f"algorithm={algorithm!r}"
         )
+    adaptive_ok = mesh is None and cfg.memory_rows % cfg.batch_rows == 0
+    if algorithm == "adaptive" and not adaptive_ok:
+        raise ValueError(
+            "algorithm='adaptive' needs a single-device stream with "
+            "memory_rows divisible by batch_rows, got "
+            f"mesh={'set' if mesh is not None else None}, "
+            f"memory_rows={cfg.memory_rows}, batch_rows={cfg.batch_rows}"
+        )
+    adaptive = algorithm == "adaptive" or (algorithm == "auto" and adaptive_ok)
+    policy = "adaptive" if adaptive else "rs"
     if pipeline != "device":
         raise ValueError(
             f"streamed input requires pipeline='device', got {pipeline!r}"
@@ -555,12 +614,14 @@ def _aggregate_stream(
     if first is None:
         with key_dtype_context(by.key_dtype):
             state, stats = pipeline_mod.insort_aggregate_device_stream(
-                iter(()), cfg, backend=backend, widths=(0, 0, 0), width=0,
-                key_dtype=by.key_dtype, output_estimate=output_estimate,
-                mesh=mesh, mesh_axis=mesh_axis,
+                iter(()), cfg, policy=policy, backend=backend,
+                widths=(0, 0, 0), width=0, key_dtype=by.key_dtype,
+                output_estimate=output_estimate, mesh=mesh,
+                mesh_axis=mesh_axis,
             )
-        plan = _plan(0, cfg, output_estimate)
-        plan.update(algorithm="insort", pipeline="device", backend=backend,
+        plan = _plan(0, cfg, output_estimate, input_sorted=input_sorted)
+        plan.update(algorithm="adaptive" if adaptive else "insort",
+                    policy=policy, pipeline="device", backend=backend,
                     streamed=True)
         return AggResult(state=state, stats=stats, by=by, aggs=aggs, plan=plan)
 
@@ -582,13 +643,17 @@ def _aggregate_stream(
     chunks = itertools.chain([first_prepped], (_prep(b) for b in it))
     with key_dtype_context(by.key_dtype):
         state, stats = pipeline_mod.insort_aggregate_device_stream(
-            chunks, cfg, backend=backend, widths=widths, width=V,
-            key_dtype=by.key_dtype, output_estimate=output_estimate,
+            chunks, cfg, policy=policy, backend=backend, widths=widths,
+            width=V, key_dtype=by.key_dtype, output_estimate=output_estimate,
             mesh=mesh, mesh_axis=mesh_axis,
         )
-    plan = _plan(rows_seen, cfg, output_estimate)
-    plan.update(algorithm="insort", pipeline="device", backend=backend,
+    plan = _plan(rows_seen, cfg, output_estimate, input_sorted=input_sorted)
+    plan.update(algorithm="adaptive" if adaptive else "insort",
+                policy=policy, pipeline="device", backend=backend,
                 streamed=True)
+    if adaptive:
+        plan["policy_switches"] = stats.policy_switches
+        plan["readbacks_paid"] = stats.readbacks_paid
     if mesh is not None:
         axis = pipeline_mod.resolve_mesh_axis(mesh, mesh_axis)
         plan["mesh"] = {"axis": axis, "world": int(mesh.shape[axis])}

@@ -264,10 +264,21 @@ class StreamEngineState:
                   run slot.
     ``ridx``      the next free run slot.
     ``spilled``   rows spilled by run generation so far.
+    ``absorbed``  valid input rows the engine has consumed so far (the
+                  observation block's denominator).
+    ``dups``      duplicate-key encounters observed while absorbing:
+                  rows that combined into an existing group (absorbing
+                  policies) or adjacent equal-key pairs within a sorted
+                  batch (non-deduping ``traditional``).  ``dups /
+                  absorbed`` is the running duplicate-rate estimate the
+                  adaptive policy governor steers on.
 
     All counters are device scalars: absorbing a chunk performs **zero**
     host synchronizations, and the spill accounting becomes a
-    :class:`DeviceSpillStats` only at the single finalize readback.
+    :class:`DeviceSpillStats` only at the single finalize readback.  The
+    observation block (``absorbed``, ``dups``, plus occupancy/``ridx``)
+    is read back *explicitly* — and only every k-th chunk — by the
+    adaptive streaming mode (:mod:`repro.core.adaptive`).
     """
 
     table: AggState
@@ -278,6 +289,8 @@ class StreamEngineState:
     cursor: jax.Array
     ridx: jax.Array
     spilled: jax.Array
+    absorbed: jax.Array
+    dups: jax.Array
 
     @property
     def run_slots(self) -> int:
@@ -298,7 +311,7 @@ class StreamEngineState:
 # slot dim).  The mesh-sharded stream keeps these as (1,)-shaped per-shard
 # arrays so every leaf can carry a sharded leading axis; these helpers
 # convert at the shard_map boundary.
-_SES_SCALARS = ("frontier", "cursor", "ridx", "spilled")
+_SES_SCALARS = ("frontier", "cursor", "ridx", "spilled", "absorbed", "dups")
 
 
 def expand_engine_scalars(es: StreamEngineState) -> StreamEngineState:
@@ -358,6 +371,14 @@ class SpillStats:
     # rows retired from the live engine — nothing leaves the engine
     # without being counted here or emitted.  0 for every one-shot plan.
     rows_retired: int = 0
+    # adaptive-streaming observation block (defaults for every fixed-policy
+    # or one-shot plan, so device-vs-host stats parity is unaffected):
+    # the engine's final duplicate-rate estimate, how often the governor
+    # switched run-generation policy mid-stream, and how many decision
+    # scalar readbacks the host paid for them (the O(stream/k) budget).
+    duplicate_rate: float = 0.0
+    policy_switches: int = 0
+    readbacks_paid: int = 0
 
     @property
     def total_spill_rows(self) -> int:
@@ -389,7 +410,19 @@ class SpillStats:
             max_index_occupancy=max(s.max_index_occupancy for s in shards),
             rows_exchanged=sum(s.rows_exchanged for s in shards),
             rows_retired=sum(s.rows_retired for s in shards),
+            duplicate_rate=max(s.duplicate_rate for s in shards),
+            policy_switches=sum(s.policy_switches for s in shards),
+            readbacks_paid=sum(s.readbacks_paid for s in shards),
         )
+
+
+class MergeOverflowError(RuntimeError):
+    """The wide merge dropped rows (``merge_dropped_rows`` tripped):
+    either its index outgrew its capacity or the output overran its
+    buffer.  Subclasses :class:`RuntimeError` so existing callers that
+    catch broadly keep working; the streaming finalize/snapshot path
+    catches *this* type specifically to auto-retry once at the next
+    pow2 output capacity."""
 
 
 @jax.tree_util.register_dataclass
@@ -486,7 +519,7 @@ class DeviceSpillStats:
                     "pass a larger output_estimate (more pre-merge levels) "
                     "or raise index_rows"
                 )
-            raise RuntimeError(
+            raise MergeOverflowError(
                 f"the wide merge during {entry_point} dropped rows: either "
                 "its index overflowed its capacity (max resident "
                 f"{int(self.max_index_occupancy)} rows) or the output "

@@ -44,6 +44,13 @@ class ServiceMetrics:
     max_index_occupancy: int = 0
     runs_generated: int = 0
     rows_spilled: int = 0
+    # adaptive-policy telemetry (zero / empty for fixed-policy sessions):
+    # the governor's switch events, the O(stream/k) scalar readbacks it
+    # paid, and the arm the next ingest will run under
+    policy_switches: int = 0
+    readbacks_paid: int = 0
+    current_policy: str = ""
+    policy_events: list[dict] = dataclasses.field(default_factory=list)
     snapshot_latencies_s: list[float] = dataclasses.field(
         default_factory=list)
 
@@ -69,6 +76,16 @@ class ServiceMetrics:
                 0.0, 1.0 - groups / self.rows_ingested)
         self.snapshot_latencies_s.append(float(seconds))
 
+    def observe_policy(self, events: list[dict], *, readbacks: int,
+                       current: str) -> None:
+        """Fold in the engine's policy-governor telemetry (host-known —
+        the events were recorded when the governor's readbacks already
+        happened, so this adds no device traffic)."""
+        self.policy_events = list(events)
+        self.policy_switches = len(self.policy_events)
+        self.readbacks_paid = int(readbacks)
+        self.current_policy = str(current)
+
     # -- derived views ---------------------------------------------------
 
     def snapshot_latency_s(self, q: float) -> float:
@@ -88,6 +105,9 @@ class ServiceMetrics:
             "max_index_occupancy": self.max_index_occupancy,
             "runs_generated": self.runs_generated,
             "rows_spilled": self.rows_spilled,
+            "policy_switches": self.policy_switches,
+            "readbacks_paid": self.readbacks_paid,
+            "current_policy": self.current_policy,
             "snapshot_p50_s": self.snapshot_latency_s(0.5),
             "snapshot_p99_s": self.snapshot_latency_s(0.99),
         }

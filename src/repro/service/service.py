@@ -64,12 +64,13 @@ class AggregationService:
         mesh=None,
         mesh_axis: str | None = None,
         overlap: bool = True,
+        governor=None,
     ):
         self._agg = StreamingAggregator(
             cfg, policy=policy, key_dtype=key_dtype, width=width,
             widths=widths, backend=backend, index_rows=index_rows,
             output_estimate=output_estimate, output_rows=output_rows,
-            mesh=mesh, mesh_axis=mesh_axis,
+            mesh=mesh, mesh_axis=mesh_axis, governor=governor,
         )
         self.overlap = bool(overlap)
         self.metrics = ServiceMetrics()
@@ -85,6 +86,12 @@ class AggregationService:
     @property
     def policy(self) -> str:
         return self._agg.policy
+
+    @property
+    def current_policy(self) -> str:
+        """The run-generation policy the next ingest will use — under
+        ``policy="adaptive"`` this is the governor's current arm."""
+        return self._agg.arm
 
     @property
     def key_dtype(self) -> np.dtype:
@@ -150,12 +157,18 @@ class AggregationService:
         self._check_open()
         self.flush()
         t0 = time.perf_counter()
-        state, dstats = self._agg.snapshot_device()
+        # the aggregator-level snapshot retries ONCE at the next pow2
+        # out_capacity if the wide merge overflows (loud log), so a
+        # slightly-low output_estimate degrades to a slow snapshot
+        # instead of a dead session
+        state, stats = self._agg.snapshot()
         jax.block_until_ready(state.keys)
-        stats = dstats.finalize(entry_point="snapshot")
         seconds = time.perf_counter() - t0
         self.metrics.observe_snapshot(
             stats, groups=int(state.occupancy()), seconds=seconds)
+        self.metrics.observe_policy(
+            self._agg.policy_events, readbacks=self._agg.readbacks_paid,
+            current=self._agg.arm)
         return state, stats
 
     # -- eviction --------------------------------------------------------
@@ -179,4 +192,8 @@ class AggregationService:
         self._check_open()
         self.flush()
         self._closed = True
-        return self._agg.finalize()
+        out = self._agg.finalize()
+        self.metrics.observe_policy(
+            self._agg.policy_events, readbacks=self._agg.readbacks_paid,
+            current=self._agg.arm)
+        return out

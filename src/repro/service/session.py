@@ -59,6 +59,7 @@ class AggregationSession:
         mesh=None,
         mesh_axis: str | None = None,
         overlap: bool = True,
+        governor=None,
     ):
         if not isinstance(aggs, AggSpec):
             aggs = AggSpec(aggs) if isinstance(aggs, str) else AggSpec(*aggs)
@@ -88,6 +89,7 @@ class AggregationSession:
             policy=policy, backend=backend, index_rows=index_rows,
             output_estimate=output_estimate, output_rows=output_rows,
             mesh=mesh, mesh_axis=mesh_axis, overlap=overlap,
+            governor=governor,
         )
         self._svc: AggregationService | None = None
         self._closed = False
