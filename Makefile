@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test bench bench-absorb bench-keywidth bench-shard bench-stream bench-service bench-adaptive bench-figures calibrate calibrate-check
+.PHONY: test bench bench-absorb bench-keywidth bench-shard bench-stream bench-service bench-adaptive bench-join bench-figures calibrate calibrate-check
 
 test:           ## tier-1 suite (property tests skip if hypothesis absent)
 	python -m pytest -x -q
@@ -14,6 +14,7 @@ bench:          ## smoke-mode benches + calibration code path (CI sanity)
 	python benchmarks/bench_stream.py --smoke
 	python benchmarks/bench_service.py --smoke
 	python benchmarks/bench_adaptive.py --smoke
+	python benchmarks/bench_join.py --smoke
 	python benchmarks/calibrate.py --smoke
 
 bench-absorb:   ## sort-absorb vs merge-absorb microbenchmark
@@ -36,6 +37,9 @@ bench-service:  ## aggregation service: sustained ingest + snapshot latency
 
 bench-adaptive: ## adaptive vs fixed policies on phase-change key streams
 	python benchmarks/bench_adaptive.py
+
+bench-join:     ## order-consuming merge join vs re-sort baseline
+	python benchmarks/bench_join.py
 
 calibrate:      ## measure per-row cost constants, regenerate core/_cost_constants.py
 	python benchmarks/calibrate.py

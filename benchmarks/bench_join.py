@@ -1,0 +1,146 @@
+"""Order-consuming merge join vs the re-sort baseline.
+
+The paper's "interesting orderings" payoff: aggregation output arrives
+key-sorted, so a downstream join can consume that order directly — a
+rank-alignment probe + compaction gather, no sort anywhere.  An engine
+that cannot carry the order property must (re)sort both inputs before it
+can merge-join them; that is the baseline raced here.  Both contenders
+run the IDENTICAL probe+gather join — the baseline just pays the two
+argsort+gathers the order-preserving pipeline proves it can skip — so
+the gap is exactly the cost of re-establishing an order the upstream
+operator already paid for.
+
+The JSON report additionally embeds the calibrated cost-model surface
+for the composed plan (what ``AggResult.merge_join`` records in
+``plan["cost_model"]``): the order-consuming side shows a ZERO sort
+term, the baseline a sort over every input row.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_join.py [--sizes 4096,16384,65536]
+            [--iters 20] [--backend xla] [--out BENCH_join.json] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import _harness
+from repro.core import cost_model
+from repro.core import merge_join as mj
+from repro.core.types import AggState, empty_key
+
+
+def _sorted_state(rng, capacity: int, occupancy: float, domain: int) -> AggState:
+    n = int(capacity * occupancy)
+    uniq = np.sort(rng.choice(domain, n, replace=False)).astype(np.uint32)
+    keys = np.full(capacity, int(empty_key(np.dtype(np.uint32))), np.uint32)
+    keys[:n] = uniq
+    count = np.zeros(capacity, np.int32)
+    count[:n] = rng.integers(1, 100, n)
+    s = np.zeros((capacity, 2), np.float32)
+    s[:n] = rng.normal(size=(n, 2))
+    inf = np.float32(np.inf)
+    mn = np.full((capacity, 2), inf, np.float32)
+    mx = np.full((capacity, 2), -inf, np.float32)
+    mn[:n] = s[:n] - 1.0
+    mx[:n] = s[:n] + 1.0
+    return AggState(keys=jnp.asarray(keys), count=jnp.asarray(count),
+                    sum=jnp.asarray(s), min=jnp.asarray(mn),
+                    max=jnp.asarray(mx))
+
+
+def _resort(st: AggState) -> AggState:
+    """What an order-oblivious engine must do before it can merge-join:
+    (re)sort the relation by key.  One argsort + full-state gather."""
+    order = jnp.argsort(st.keys)
+    return AggState(
+        keys=jnp.take(st.keys, order),
+        count=jnp.take(st.count, order),
+        sum=jnp.take(st.sum, order, axis=0),
+        min=jnp.take(st.min, order, axis=0),
+        max=jnp.take(st.max, order, axis=0),
+    )
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--sizes", type=str, default="4096,16384,65536",
+                   help="comma-separated per-side group counts (capacities)")
+    p.add_argument("--out", type=str, default=None,
+                   help="JSON report path (default: repo-root BENCH_join.json)")
+    _harness.add_common_args(p, iters=20)
+    args = p.parse_args()
+    if args.smoke:
+        args.sizes, args.iters = "1024", 3
+
+    rng = np.random.default_rng(0)
+    be = args.backend
+    sizes = [int(s) for s in args.sizes.split(",")]
+
+    ordered_jit = jax.jit(
+        lambda a, b: mj.merge_join(a, b, how="inner", backend=be))
+    resort_jit = jax.jit(
+        lambda a, b: mj.merge_join(_resort(a), _resort(b), how="inner",
+                                   backend=be))
+
+    header = (f"{'groups/side':>12} {'matched':>8} {'order-consuming':>16} "
+              f"{'re-sort join':>13} {'speedup':>8}")
+    print(f"backend={be}  iters={args.iters}")
+    print(header)
+    print("-" * len(header))
+    rows, wins = [], True
+    for m in sizes:
+        # ~75% occupancy, ~50% key overlap between the two sides
+        a = _sorted_state(rng, m, 0.75, domain=2 * m)
+        b = _sorted_state(rng, m, 0.75, domain=2 * m)
+        matched = int(np.intersect1d(np.asarray(a.keys),
+                                     np.asarray(b.keys)).size) - 1
+        t_ord = _harness.time_fn(ordered_jit, a, b, iters=args.iters)
+        t_re = _harness.time_fn(resort_jit, a, b, iters=args.iters)
+        speedup = t_re / t_ord
+        wins &= speedup > 1.0
+        rows.append({"groups_per_side": m, "matched_keys": matched,
+                     "order_consuming_s": t_ord, "resort_join_s": t_re,
+                     "speedup": speedup})
+        print(f"{m:>12} {matched:>8} {t_ord * 1e3:>14.3f}ms "
+              f"{t_re * 1e3:>11.3f}ms {speedup:>7.2f}x")
+
+    # the composed plan's calibrated surface: zero sort term on the join
+    # side (exactly what AggResult.merge_join records in plan["cost_model"])
+    m = sizes[-1]
+    surface = cost_model.join_cost_surface(m, m, inputs_sorted=True)
+    baseline = cost_model.join_cost_surface(m, m, inputs_sorted=False)
+    assert surface["sort_rows"] == 0.0
+    print(f"cost model @ {m}/side: join sort_rows={surface['sort_rows']:.0f} "
+          f"(re-sort baseline {baseline['sort_rows']:.0f}), "
+          f"sort_ns_avoided={surface['sort_ns_avoided']:.0f}")
+
+    _harness.write_json_report(
+        {
+            "benchmark": "merge_join_order_consuming_vs_resort",
+            "backend": be,
+            "iters": args.iters,
+            "rows": rows,
+            "cost_model": {"join_side": surface, "resort_baseline": baseline},
+        },
+        out=args.out, smoke=args.smoke, default_name="BENCH_join.json",
+    )
+
+    if _harness.interpret_note(be):
+        return 0
+    if args.smoke:
+        print("smoke OK (perf win-check skipped at smoke sizes)")
+        return 0
+    if not wins:
+        print("WARNING: order-consuming join did not beat the re-sort "
+              "baseline at some size")
+        return 1
+    print("OK: order-consuming merge join beats the re-sort baseline at "
+          "every size")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,6 +16,10 @@
 #                                 parity / non-destructiveness / TTL
 #                                 eviction tests, then the service bench
 #                                 in smoke mode
+#   scripts/test.sh --join        order-preserving join selector: merge
+#                                 join oracle parity / jaxpr no-sort
+#                                 checks / composed pipeline parity,
+#                                 then the join bench in smoke mode
 #   scripts/test.sh --adaptive    adaptive-policy selector: governor
 #                                 decision paths, oracle parity on
 #                                 Zipf/phase-change streams, readback
@@ -44,6 +48,13 @@ if [[ "${1:-}" == "--service" ]]; then
   shift
   python -m pytest -x -q tests/test_service.py "$@"
   python benchmarks/bench_service.py --smoke
+  exit 0
+fi
+
+if [[ "${1:-}" == "--join" ]]; then
+  shift
+  python -m pytest -x -q tests/test_join.py "$@"
+  python benchmarks/bench_join.py --smoke
   exit 0
 fi
 

@@ -15,10 +15,12 @@ from __future__ import annotations
 
 _SCHEMA_EXPORTS = (
     "aggregate",
+    "pipeline",
     "rollup",
     "serve_aggregate",
     "AggResult",
     "AggSpec",
+    "JoinResult",
     "KeyColumn",
     "KeySpec",
 )

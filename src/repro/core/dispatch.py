@@ -55,6 +55,11 @@ class Backend:
         duplicates — the raw sorted multiset union (traditional merge
         levels that defer aggregation need exactly this).  ``None``
         means the engine falls back to the XLA rank-gather interleave.
+    ``join_probe(a_keys, b_keys) -> (pos, hit)`` (optional)
+        Rank-align each key of a *sorted* vector against a second
+        *sorted* vector (the merge join's probe phase; see
+        :func:`repro.core.merge_join.join_probe`).  ``None`` means the
+        join falls back to the XLA searchsorted probe.
     ``shardable``
         Whether the backend's primitives may be traced inside a
         ``shard_map`` manual-collective region (the mesh-sharded
@@ -68,6 +73,7 @@ class Backend:
     segmented_combine: Callable
     merge_sorted: Callable
     interleave: Callable | None = None
+    join_probe: Callable | None = None
     shardable: bool = True
 
 
@@ -179,6 +185,7 @@ def _load_pallas() -> Backend:
         # no fused non-combining merge kernel yet: the rank-gather
         # interleave is memory-bound and the XLA fallback serves it
         interleave=None,
+        join_probe=kops.join_probe,
     )
 
 

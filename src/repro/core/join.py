@@ -1,4 +1,4 @@
-"""Join-by-grouping (paper §2.5, Fig 4).
+"""Join-by-grouping (paper §2.5, Fig 4): the fused join over RAW rows.
 
 An inner join computed *inside* the sort: both inputs' rows are tagged
 with their side and sorted together on the join key; equal keys form
@@ -18,6 +18,19 @@ aggregation-fused join this engine targets (the paper's group-join and
 set operations in §2.2/§2.5).  Full row enumeration joins would enumerate
 packet members instead; the packet algebra is identical.
 
+This module joins **unaggregated inputs** with ONE mixed sort.  Its
+sibling :mod:`repro.core.merge_join` is the other half of the paper's
+story: once each side has been aggregated separately (each paying its
+own sort), the join consumes the two established orders with NO sort at
+all — that is the operator behind :meth:`repro.AggResult.merge_join`.
+
+Join keys route through :class:`repro.core.schema.KeySpec` packing:
+multi-column and >32-bit keys work (the packed dtype — uint32 or
+uint64 — is whatever the spec needs), and a dtype mismatch between the
+two sides raises immediately instead of silently truncating, which is
+what the seed prototype did (`.astype(np.uint32)` on both sides joins
+garbage the moment a key exceeds 32 bits).
+
 ``join_aggregate`` returns, per join key: |L|·|R| (the join cardinality
 contribution) and Σ_L payload·|R| + |L|·Σ_R payload style sums — enough
 for COUNT/SUM/AVG group-joins — plus exact spill accounting showing the
@@ -25,32 +38,86 @@ paper's claim that the mixed sort spills each input row once.
 """
 from __future__ import annotations
 
+from typing import Mapping
+
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import insort as insort_mod
-from repro.core.types import EMPTY, AggState, ExecConfig, SpillStats
-from repro.core.operators import pack_keys
+from repro.core.types import ExecConfig, empty_key, key_dtype_context
+
+
+def _pack_side(side, by) -> np.ndarray:
+    """One side's join keys → a packed key vector of ``by.key_dtype``."""
+    if isinstance(side, Mapping):
+        return by.pack(side)
+    arr = np.asarray(side)
+    if arr.ndim == 1 and len(by.columns) == 1:
+        return by.pack([arr])
+    return by.pack(side)  # significance-ordered sequence of columns
+
+
+def resolve_join_keys(left_keys, right_keys, by=None):
+    """Pack/validate both sides' join keys into ONE shared key dtype.
+
+    With ``by`` (a :class:`~repro.core.schema.KeySpec`), both sides pack
+    through the same column layout — multi-column and >32-bit keys work,
+    and per-column bit budgets are validated.  Without it, both sides
+    must already be integer vectors of the SAME dtype (the common uint32
+    or uint64 key space is then inferred); differing dtypes raise — the
+    caller must say which packing they mean via a KeySpec rather than
+    have one side silently truncated or reinterpreted.
+    """
+    if by is not None:
+        return _pack_side(left_keys, by), _pack_side(right_keys, by), \
+            by.key_dtype
+    lk = np.asarray(left_keys)
+    rk = np.asarray(right_keys)
+    if lk.dtype != rk.dtype:
+        raise TypeError(
+            f"join key dtype mismatch: left is {lk.dtype}, right is "
+            f"{rk.dtype} — equal bit patterns would not mean equal keys. "
+            "Pack both sides through one KeySpec (by=...) instead"
+        )
+    if lk.dtype.kind not in "ui":
+        raise TypeError(f"join keys must be integers, got {lk.dtype}")
+    if lk.dtype.kind == "i" and (
+        (lk.size and int(lk.min()) < 0) or (rk.size and int(rk.min()) < 0)
+    ):
+        raise ValueError("join keys must be non-negative")
+    hi = max(int(lk.max()) if lk.size else 0, int(rk.max()) if rk.size else 0)
+    kd = np.dtype(np.uint64) if (lk.dtype.itemsize > 4 or hi >= 2**32 - 1) \
+        else np.dtype(np.uint32)
+    if hi >= int(empty_key(kd)):
+        raise ValueError(
+            f"join key {hi} collides with the {kd} EMPTY sentinel; pack "
+            "through a wider KeySpec"
+        )
+    return lk.astype(kd), rk.astype(kd), kd
 
 
 def join_aggregate(
-    left_keys: np.ndarray,
-    right_keys: np.ndarray,
+    left_keys,
+    right_keys,
     left_payload: np.ndarray | None = None,
     right_payload: np.ndarray | None = None,
     cfg: ExecConfig | None = None,
     *,
+    by=None,
     output_estimate: int | None = None,
 ):
-    """Aggregation-fused inner join on uint32 keys via one mixed sort.
+    """Aggregation-fused inner join via one mixed sort (§2.5, Fig 4).
 
-    Returns (keys, join_count, sum_left_x_count_right, count_left_x_sum_right,
-    stats).  keys are sorted (interesting ordering for downstream merge
-    joins); stats shows each input row spilled ≤ once.
+    ``left_keys`` / ``right_keys``: integer key vectors of one shared
+    dtype, or — with ``by=KeySpec(...)`` — named column mappings packed
+    through the spec (multi-column and >32-bit join keys).  Returns
+    (result dict, stats): per sorted join key, |L|, |R|, |L|·|R|, and the
+    Σ payload·count cross sums.  keys are sorted (interesting ordering
+    for downstream merge joins); stats shows each input row spilled ≤
+    once.
     """
     cfg = cfg or ExecConfig()
-    lk = np.asarray(left_keys, dtype=np.uint32)
-    rk = np.asarray(right_keys, dtype=np.uint32)
+    lk, rk, key_dtype = resolve_join_keys(left_keys, right_keys, by)
     lp = (np.zeros((len(lk), 0), np.float32) if left_payload is None
           else np.asarray(left_payload, np.float32).reshape(len(lk), -1))
     rp = (np.zeros((len(rk), 0), np.float32) if right_payload is None
@@ -73,10 +140,11 @@ def join_aggregate(
     feats[: len(lk), 2 : 2 + width] = pad(lp)
     feats[len(lk):, 2 + width :] = pad(rp)
 
-    state, stats = insort_mod.insort_aggregate(
-        keys, feats, cfg, output_estimate=output_estimate
-    )
-    valid = state.valid()
+    with key_dtype_context(key_dtype):
+        state, stats = insort_mod.insort_aggregate(
+            keys, feats, cfg, output_estimate=output_estimate
+        )
+        valid = state.valid()
     n_l = state.sum[:, 0]          # |L| per packet
     n_r = state.sum[:, 1]          # |R| per packet
     sum_l = state.sum[:, 2 : 2 + width]
@@ -100,7 +168,7 @@ def semi_join(left_keys, right_keys, cfg=None, **kw):
     res, stats = join_aggregate(left_keys, right_keys, cfg=cfg, **kw)
     k = np.asarray(res["keys"])
     mask = (np.asarray(res["n_left"]) > 0) & (np.asarray(res["n_right"]) > 0)
-    return k[mask & (k != EMPTY)], stats
+    return k[mask & (k != empty_key(k.dtype))], stats
 
 
 def anti_semi_join(left_keys, right_keys, cfg=None, **kw):
@@ -109,4 +177,4 @@ def anti_semi_join(left_keys, right_keys, cfg=None, **kw):
     res, stats = join_aggregate(left_keys, right_keys, cfg=cfg, **kw)
     k = np.asarray(res["keys"])
     mask = (np.asarray(res["n_left"]) > 0) & (np.asarray(res["n_right"]) == 0)
-    return k[mask & (k != EMPTY)], stats
+    return k[mask & (k != empty_key(k.dtype))], stats

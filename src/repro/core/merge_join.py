@@ -1,0 +1,189 @@
+"""Order-consuming merge join over sorted, duplicate-free states.
+
+The paper's second claim is that sort-based aggregation pays for itself
+*downstream*: its output relation arrives key-sorted, so a subsequent
+join can be a **merge join** that never sorts.  Every ``AggResult`` in
+this repo (one-shot, streamed, sharded, service snapshot) satisfies the
+OrderedIndex invariant — keys ascending, valid keys duplicate-free,
+EMPTY-padded suffix — which is exactly a merge join's precondition.
+
+This module is the device-resident join layer over that invariant:
+
+* :func:`join_probe` — the two-sided probe: each left row binary-searches
+  the right key vector once (``searchsorted`` rank alignment, the same
+  primitive the linear merge-absorb is built from) producing a match
+  rank + hit mask.  No sort of either input ever happens; the jaxpr
+  contains **no sort and no scatter** (tested, u32 and u64).  The Pallas
+  backend routes the probe through the merge-path kernel's lane-parallel
+  binary search (:func:`repro.kernels.merge_path.merge_path_probe_tiles`)
+  so 64-bit keys compare as (hi, lo) uint32 lanes on TPU.
+* :func:`merge_join` — inner / left-semi / left-anti join of two sorted
+  duplicate-free ``AggState``s: probe + cumsum-invert compaction gather
+  (shared with the segmented combine).  Inner joins return BOTH sides'
+  aggregate rows aligned on one sorted key vector, which is what lets a
+  downstream rollup peel prefix levels from the join output without any
+  further sort (see :meth:`repro.core.schema.JoinResult.rollup`).
+* :func:`group_join_products` — the aggregation-fused group-join of
+  §2.5/Fig 4 over two *already aggregated* sides: per key,
+  ``|L|·|R|`` (the join cardinality contribution) and the
+  ``Σ_L payload·|R|`` / ``|L|·Σ_R payload`` cross sums — COUNT/SUM/AVG
+  group-joins straight from the two sides' aggregate states, no row
+  enumeration.
+
+Both inputs must share one key dtype (uint32 or uint64, caller holds
+:func:`repro.core.types.key_dtype_context` for uint64 — the schema layer
+does).  Capacities are static: the joined state has the LEFT capacity
+(each left key matches at most one right key since both sides are
+duplicate-free), so jitted callers see fixed shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.core.ordered_index import compact_indices
+from repro.core import types as types_mod
+from repro.core.types import AggState, empty_key
+
+JOIN_HOWS = ("inner", "semi", "anti")
+
+_INF = jnp.float32(jnp.inf)
+
+
+def join_probe(
+    a_keys: jax.Array, b_keys: jax.Array, *, backend: str = "auto"
+) -> tuple[jax.Array, jax.Array]:
+    """Rank-align each (sorted) left key against the (sorted) right keys.
+
+    Returns ``(pos, hit)``: ``pos[i]`` is the right row holding
+    ``a_keys[i]`` when ``hit[i]`` (clipped to a valid row index
+    otherwise), via one ``searchsorted`` per left row — the merge join's
+    entire "merge" phase, no sort, no scatter.  EMPTY left rows never
+    hit (EMPTY is the key dtype's maximum and is excluded explicitly);
+    the EMPTY tail of ``b_keys`` ranks after every valid key and cannot
+    produce a false hit because EMPTY ≠ any valid key.
+    """
+    be = dispatch.get_backend(backend)
+    if be.join_probe is not None:
+        return be.join_probe(a_keys, b_keys)
+    return join_probe_xla(a_keys, b_keys)
+
+
+def join_probe_xla(a_keys: jax.Array, b_keys: jax.Array):
+    """XLA reference probe (see :func:`join_probe`)."""
+    sentinel = empty_key(a_keys.dtype)
+    m = b_keys.shape[0]
+    if m == 0:
+        pos = jnp.zeros(a_keys.shape, jnp.int32)
+        return pos, jnp.zeros(a_keys.shape, bool)
+    pos = jnp.searchsorted(
+        b_keys, a_keys, side="left", method="scan_unrolled"
+    ).astype(jnp.int32)
+    pos = jnp.minimum(pos, m - 1)
+    probed = jnp.take(b_keys, pos, mode="clip")
+    hit = (probed == a_keys) & (a_keys != sentinel)
+    return pos, hit
+
+
+def _gather_rows(state: AggState, idx: jax.Array, live: jax.Array) -> AggState:
+    """Row-gather ``state`` through ``idx``, neutral-filling dead rows."""
+
+    def pick(col, fill):
+        v = jnp.take(col, idx, axis=0, mode="clip")
+        mask = live.reshape((-1,) + (1,) * (v.ndim - 1))
+        return jnp.where(mask, v, fill)
+
+    return AggState(
+        keys=pick(state.keys, empty_key(state.keys.dtype)),
+        count=pick(state.count, 0),
+        sum=pick(state.sum, 0.0),
+        min=pick(state.min, _INF),
+        max=pick(state.max, -_INF),
+    )
+
+
+@jax.jit
+def compact_state(state: AggState) -> AggState:
+    """Close interior EMPTY gaps with ONE compaction gather.
+
+    A mesh-sharded relation is globally sorted by (owner, key) but
+    EMPTY-padded *per shard*, so its key vector has interior sentinel
+    runs.  Valid keys are still ascending, so compacting them to the
+    front restores the single-device OrderedIndex layout without a sort
+    (and without emitting one) — the order the upstream sort established
+    survives the shuffle.
+    """
+    src, live = compact_indices(state.keys != empty_key(state.keys.dtype))
+    return _gather_rows(state, src, live)
+
+
+@functools.partial(jax.jit, static_argnames=("how", "backend"))
+def merge_join(
+    a: AggState, b: AggState, *, how: str = "inner", backend: str = "xla"
+) -> tuple[AggState, AggState | None]:
+    """Merge join of two sorted, duplicate-free, EMPTY-padded states.
+
+    ``how``:
+
+    * ``"inner"`` — keys present on both sides.  Returns ``(left,
+      right)``: two states of capacity ``|a|`` sharing ONE sorted key
+      vector (matches compacted to the front, EMPTY tail), ``left``
+      carrying the left side's aggregate planes and ``right`` the
+      right side's.
+    * ``"semi"`` — left rows with a right match (``right`` is None).
+    * ``"anti"`` — left rows with NO right match — the paper notes these
+      "cannot be produced early"; here they are simply the probe's
+      misses (``right`` is None).
+
+    The program is probe (rank alignment) + compaction gather: no sort
+    and no scatter primitive on the XLA backend (jaxpr-tested for u32
+    and u64 keys), because the inputs' established order does all the
+    work — this is the "interesting orderings" payoff the cost model
+    credits via the zero sort term.
+    """
+    if how not in JOIN_HOWS:
+        raise ValueError(f"unknown join how={how!r}; expected one of {JOIN_HOWS}")
+    if a.capacity == 0:
+        return a, (b if how == "inner" else None)
+    pos, hit = join_probe(a.keys, b.keys, backend=backend)
+    if how == "anti":
+        keep = (a.keys != empty_key(a.keys.dtype)) & ~hit
+    else:
+        keep = hit
+    src, live = compact_indices(keep)
+    left = _gather_rows(a, src, live)
+    if how != "inner":
+        return left, None
+    if b.capacity == 0:
+        return left, types_mod.empty_like(b, a.capacity)
+    right = _gather_rows(b, jnp.take(pos, src, mode="clip"), live)
+    return left, right
+
+
+def group_join_products(left: AggState, right: AggState) -> dict[str, jax.Array]:
+    """The aggregation-fused group-join (§2.5, Fig 4) over an inner merge
+    join's aligned sides.
+
+    Per joined key ``k`` with left packet ``(|L|, Σ_L v)`` and right
+    packet ``(|R|, Σ_R w)``:
+
+    * ``join_count``      = |L|·|R| — this key's contribution to the
+      join cardinality (float32: counts are per-side group sizes and
+      their product overflows int32 on hot keys);
+    * ``sum_left_x_count_right`` = Σ_L v · |R| — the sum of the left
+      payload over all (l, r) join pairs;
+    * ``count_left_x_sum_right`` = |L| · Σ_R w — symmetric.
+
+    Enough for COUNT(*)/SUM/AVG group-joins without enumerating a single
+    join pair; full row enumeration would expand the same packets.
+    """
+    n_l = left.count.astype(jnp.float32)
+    n_r = right.count.astype(jnp.float32)
+    return {
+        "join_count": n_l * n_r,
+        "sum_left_x_count_right": left.sum * n_r[:, None],
+        "count_left_x_sum_right": right.sum * n_l[:, None],
+    }

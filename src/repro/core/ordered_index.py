@@ -167,19 +167,27 @@ def segmented_combine_xla(state: AggState) -> AggState:
     return _compact_rows(scanned, tails)
 
 
-def _compact_rows(state: AggState, keep: jax.Array) -> AggState:
-    """Gather the ``keep``-flagged rows to the front (EMPTY/neutral tail)
-    without a scatter: the position of the j-th kept row is found by a
-    binary search over the running count of kept rows."""
-    n = state.capacity
+def compact_indices(keep: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Gather indices compacting the ``keep``-flagged rows to the front
+    without a scatter: ``src[j]`` is the row index of the j-th kept row
+    (found by a binary search over the running count of kept rows) and
+    ``live[j]`` flags whether output row j holds a kept row at all.
+    Shared by the segmented-combine compaction and the merge join's
+    match compaction."""
+    n = keep.shape[0]
     csum = jnp.cumsum(keep.astype(jnp.int32))
     n_keep = csum[-1]
     j = jnp.arange(n, dtype=jnp.int32)
-    pos = jnp.searchsorted(csum, j + 1, side="left", method="scan_unrolled").astype(
+    src = jnp.searchsorted(csum, j + 1, side="left", method="scan_unrolled").astype(
         jnp.int32
     )
-    pos = jnp.minimum(pos, n - 1)
-    live = j < n_keep
+    return jnp.minimum(src, n - 1), j < n_keep
+
+
+def _compact_rows(state: AggState, keep: jax.Array) -> AggState:
+    """Gather the ``keep``-flagged rows to the front (EMPTY/neutral tail)
+    via :func:`compact_indices` — no scatter."""
+    pos, live = compact_indices(keep)
 
     def take_live(col, fill):
         v = jnp.take(col, pos, axis=0, mode="clip")

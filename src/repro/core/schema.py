@@ -47,12 +47,15 @@ from repro.core import cost_model
 from repro.core import dispatch
 from repro.core import hash_agg as hash_mod
 from repro.core import insort as insort_mod
+from repro.core import merge_join as mj_mod
 from repro.core import sorted_ops
 from repro.core.types import (
     AggState,
     ExecConfig,
     SpillStats,
+    concat_states,
     empty_key,
+    empty_like,
     key_dtype_context,
     key_dtype_for_bits,
     max_key,
@@ -311,6 +314,430 @@ class AggResult:
         for name, col in self.aggs.finalize(self.state).items():
             out[name] = np.asarray(col)[mask]
         return out
+
+    @property
+    def sorted_by(self) -> dict[str, Any]:
+        """The order property this relation carries: rows ascend by the
+        packed composite key, i.e. lexicographically by every ``by``
+        column (major first) — established by the ONE sort the aggregation
+        paid.  Downstream operators consume it instead of re-sorting:
+        :meth:`merge_join` and :meth:`rollup` run with a zero sort term,
+        which is what the plan's ``input_sorted`` / ``inputs_sorted``
+        cost-model credit records."""
+        return {
+            "columns": self.by.names,
+            "prefix_len": len(self.by.columns),
+            "key_dtype": str(np.dtype(self.by.key_dtype)),
+        }
+
+    def _ordered_state(self) -> AggState:
+        """The state with the single-device OrderedIndex layout (keys
+        ascending, ONE EMPTY tail).  Mesh-produced relations are globally
+        sorted but EMPTY-padded per shard; one compaction gather — not a
+        sort — closes the interior gaps."""
+        if self.plan.get("mesh"):
+            return mj_mod.compact_state(self.state)
+        return self.state
+
+    def merge_join(
+        self,
+        other: "AggResult",
+        *,
+        how: str = "inner",
+        backend: str = "auto",
+        mesh=None,
+        mesh_axis: str | None = None,
+    ) -> "JoinResult":
+        """Merge join with another aggregated relation, consuming BOTH
+        sides' established key order — no sort, no scatter (§2.5 +
+        the "interesting orderings" payoff).
+
+        ``how``: ``"inner"`` (aligned per-side aggregate packets plus the
+        group-join product columns), ``"semi"`` (this side's groups with
+        a match), ``"anti"`` (groups without one).  Join keys must agree
+        between the two sides — same packed dtype and same column bit
+        layout — and a mismatch raises immediately (a silent truncation
+        would join garbage).
+
+        ``mesh`` runs the sharded form: both sides are partitioned by ONE
+        jointly sampled cut vector through the existing key-range
+        ``all_to_all``, each owner merges its fragments and joins
+        locally — order survives the shuffle, so there is still no sort
+        anywhere.  ``stats.rows_exchanged`` counts both sides' shuffle
+        volume on top of whatever the inputs already paid."""
+        _check_join_compat(self.by, other.by)
+        if how not in mj_mod.JOIN_HOWS:
+            raise ValueError(
+                f"unknown join how={how!r}; expected one of {mj_mod.JOIN_HOWS}"
+            )
+        backend = dispatch.resolve_backend_name(backend)
+        stats = SpillStats.reduce_shards([self.stats, other.stats])
+        plan: dict[str, Any] = {
+            "operator": "merge_join",
+            "how": how,
+            "backend": backend,
+            "inputs_sorted": True,
+            "sorted_by": [self.sorted_by, other.sorted_by],
+            "left_plan": self.plan,
+            "right_plan": other.plan,
+        }
+        with key_dtype_context(self.by.key_dtype):
+            if mesh is not None:
+                left, right, sent, axis, world = _mesh_merge_join(
+                    self._ordered_state(), other._ordered_state(),
+                    mesh, mesh_axis, how=how, backend=backend,
+                )
+                stats = dataclasses.replace(
+                    stats, rows_exchanged=stats.rows_exchanged + sent
+                )
+                plan["mesh"] = {"axis": axis, "world": world}
+            else:
+                left, right = mj_mod.merge_join(
+                    self._ordered_state(), other._ordered_state(),
+                    how=how, backend=backend,
+                )
+            products = None
+            if how == "inner":
+                products = _join_products_state(left, right)
+        plan["cost_model"] = cost_model.join_cost_surface(
+            self.state.capacity, other.state.capacity, inputs_sorted=True,
+        )
+        plan["cost_model_resort_baseline"] = cost_model.join_cost_surface(
+            self.state.capacity, other.state.capacity, inputs_sorted=False,
+        )
+        return JoinResult(
+            left=left, right=right, products=products, by=self.by,
+            left_aggs=self.aggs, right_aggs=other.aggs, stats=stats,
+            plan=plan, how=how,
+        )
+
+    def rollup(
+        self, levels: Sequence[int] | None = None, *, backend: str = "auto"
+    ) -> dict[tuple[str, ...], "AggResult"]:
+        """Coarser prefix levels peeled from this ALREADY-sorted result —
+        §2.2's "rollup from one sort", as an operator over the result
+        instead of a fresh aggregation: no input re-read, no sort, no
+        spill.  Returns ``{prefix column names: AggResult}`` like the
+        module-level :func:`rollup`."""
+        backend = dispatch.resolve_backend_name(backend)
+        out: dict[tuple[str, ...], AggResult] = {}
+        with key_dtype_context(self.by.key_dtype):
+            state = self._ordered_state()
+            for names, st, spec in _iter_prefix_levels(
+                state, self.by, levels, backend
+            ):
+                plan = dict(self.plan)
+                plan.pop("mesh", None)  # compacted above: tail layout again
+                plan["rollup"] = {"level": names, "sorts": 0,
+                                  "from_order": self.sorted_by}
+                out[names] = AggResult(
+                    state=st, stats=self.stats, by=spec, aggs=self.aggs,
+                    plan=plan,
+                )
+        return out
+
+
+def _check_join_compat(left_by: KeySpec, right_by: KeySpec) -> None:
+    """Joining two relations requires ONE shared packed key space: same
+    key dtype and same column bit layout.  Anything else raises loudly —
+    the seed prototype silently truncated to uint32, which joins garbage
+    on >32-bit keys."""
+    if left_by.key_dtype != right_by.key_dtype:
+        raise TypeError(
+            f"join key dtype mismatch: left packs to "
+            f"{np.dtype(left_by.key_dtype)} ({left_by.total_bits} bits, "
+            f"columns {left_by.names}), right to "
+            f"{np.dtype(right_by.key_dtype)} ({right_by.total_bits} bits, "
+            f"columns {right_by.names}) — repack both sides with one "
+            "KeySpec bit layout"
+        )
+    lb = tuple(c.bits for c in left_by.columns)
+    rb = tuple(c.bits for c in right_by.columns)
+    if lb != rb:
+        raise TypeError(
+            f"join key layout mismatch: left columns {left_by.names} pack "
+            f"as bits {lb}, right columns {right_by.names} as {rb} — equal "
+            "packed keys would not mean equal column values"
+        )
+
+
+def _join_products_state(left: AggState, right: AggState) -> AggState:
+    """The group-join product columns (§2.5) materialized as an AggState
+    sharing the join's key vector, sum plane = [join_count,
+    Σ_L·|R| (V_L cols), |L|·Σ_R (V_R cols)].  Carrying the products as
+    sum planes makes rollup exact: SUM over join pairs is additive
+    across fine keys, so peeling a prefix level segmented-combines the
+    products right along with the per-side packets."""
+    prods = mj_mod.group_join_products(left, right)
+    plane = jnp.concatenate(
+        [
+            prods["join_count"][:, None],
+            prods["sum_left_x_count_right"],
+            prods["count_left_x_sum_right"],
+        ],
+        axis=1,
+    )
+    n = left.capacity
+    return AggState(
+        keys=left.keys,
+        count=left.count,
+        sum=plane,
+        min=jnp.zeros((n, 0), jnp.float32),
+        max=jnp.zeros((n, 0), jnp.float32),
+    )
+
+
+@dataclasses.dataclass
+class JoinResult:
+    """Result of an order-consuming :meth:`AggResult.merge_join`.
+
+    ``left`` and ``right`` are per-side aggregate packets **aligned on
+    ONE sorted key vector** (right is None for semi/anti); ``products``
+    carries the §2.5 group-join product columns as sum planes (inner
+    only).  Because everything shares one key order, the result is
+    itself an ordered relation: :meth:`rollup` peels prefix levels from
+    it with segmented combines — still zero sorts downstream of the
+    sources' original ones."""
+
+    left: AggState
+    right: AggState | None
+    products: AggState | None
+    by: KeySpec
+    left_aggs: AggSpec
+    right_aggs: AggSpec
+    stats: SpillStats
+    plan: dict[str, Any]
+    how: str = "inner"
+
+    @property
+    def state(self) -> AggState:
+        return self.left
+
+    @property
+    def keys(self):
+        return self.left.keys
+
+    def occupancy(self) -> int:
+        return int(self.left.occupancy())
+
+    @property
+    def sorted_by(self) -> dict[str, Any]:
+        """Join output inherits the inputs' key order (see
+        :attr:`AggResult.sorted_by`)."""
+        return {
+            "columns": self.by.names,
+            "prefix_len": len(self.by.columns),
+            "key_dtype": str(np.dtype(self.by.key_dtype)),
+        }
+
+    def _ordered_states(self) -> tuple[AggState, ...]:
+        states = tuple(
+            s for s in (self.left, self.right, self.products) if s is not None
+        )
+        if self.plan.get("mesh"):
+            # identical key vectors ⇒ identical compaction ⇒ alignment holds
+            states = tuple(mj_mod.compact_state(s) for s in states)
+        return states + (None,) * (3 - len(states))
+
+    def relation(self) -> dict[str, np.ndarray]:
+        """Key columns + per-side aggregate columns (``*_left`` /
+        ``*_right``) + the group-join product columns (inner joins),
+        padding removed, rows in key order."""
+        keys = np.asarray(self.left.keys)
+        mask = keys != empty_key(keys.dtype)
+        out = {n: c[mask] for n, c in self.by.unpack(keys).items()}
+        for name, col in self.left_aggs.finalize(self.left).items():
+            out[f"{name}_left"] = np.asarray(col)[mask]
+        if self.right is not None:
+            for name, col in self.right_aggs.finalize(self.right).items():
+                out[f"{name}_right"] = np.asarray(col)[mask]
+        if self.products is not None:
+            wl = self.left.sum.shape[1]
+            plane = np.asarray(self.products.sum)[mask]
+            out["join_count"] = plane[:, 0]
+            out["sum_left_x_count_right"] = plane[:, 1 : 1 + wl]
+            out["count_left_x_sum_right"] = plane[:, 1 + wl :]
+        return out
+
+    def rollup(
+        self, levels: Sequence[int] | None = None, *, backend: str = "auto"
+    ) -> dict[tuple[str, ...], "JoinResult"]:
+        """Prefix-level rollup OF THE JOIN — aggregate → merge join →
+        rollup from the sources' single sorts.  All constituent states
+        share one key vector, so each peel applies the identical
+        segmented combine to every side and alignment is preserved; the
+        product planes are sums over join pairs, hence roll up exactly
+        (the coarse ``join_count`` is Σ over fine matched keys of
+        |L|·|R|, i.e. the fine join's cardinality grouped by prefix)."""
+        backend = dispatch.resolve_backend_name(backend)
+        out: dict[tuple[str, ...], JoinResult] = {}
+        with key_dtype_context(self.by.key_dtype):
+            left0, right0, prod0 = self._ordered_states()
+            peels = [_iter_prefix_levels(left0, self.by, levels, backend)]
+            if right0 is not None:
+                peels.append(_iter_prefix_levels(right0, self.by, levels, backend))
+            if prod0 is not None:
+                peels.append(_iter_prefix_levels(prod0, self.by, levels, backend))
+            for tier in zip(*peels):
+                names, st_l, spec = tier[0]
+                st_r = tier[1][1] if right0 is not None else None
+                st_p = tier[-1][1] if prod0 is not None else None
+                plan = dict(self.plan)
+                plan.pop("mesh", None)
+                plan["rollup"] = {"level": names, "sorts": 0,
+                                  "from_order": self.sorted_by}
+                out[names] = JoinResult(
+                    left=st_l, right=st_r, products=st_p, by=spec,
+                    left_aggs=self.left_aggs, right_aggs=self.right_aggs,
+                    stats=self.stats, plan=plan, how=self.how,
+                )
+        return out
+
+
+def _mesh_merge_join(a: AggState, b: AggState, mesh, mesh_axis, *,
+                     how: str, backend: str):
+    """Mesh-sharded merge join: joint sampled cuts → both sides through
+    the key-range exchange → per-owner local merge join (see
+    :func:`repro.distributed.groupby.sharded_merge_join_local`).  Returns
+    ``(left, right_or_None, rows_exchanged, axis, world)``; raises on any
+    shard's row loss (loud-overflow contract)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.pipeline import resolve_mesh_axis
+    from repro.distributed import groupby as gb_mod
+    from repro.distributed._compat import shard_map
+
+    axis = resolve_mesh_axis(mesh, mesh_axis)
+    world = int(mesh.shape[axis])
+    dispatch.check_shardable(backend)
+
+    def prep(st: AggState) -> AggState:
+        cap = -(-st.capacity // world) * world
+        if cap != st.capacity:
+            st = concat_states(st, empty_like(st, cap - st.capacity))
+        return st
+
+    a, b = prep(a), prep(b)
+    spec = AggState(keys=P(axis), count=P(axis), sum=P(axis, None),
+                    min=P(axis, None), max=P(axis, None))
+
+    def body(a_, b_):
+        return gb_mod.sharded_merge_join_local(
+            a_, b_, axis, world, how=how, backend=backend
+        )
+
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                   out_specs=(spec, spec, P(), P()), check=False)
+    left, right, rows_sent, dropped = fn(a, b)
+    if bool(dropped):
+        raise RuntimeError(
+            "mesh-sharded merge join dropped rows: a key-range owner's "
+            "matches exceeded its output slice (skewed cuts) — results "
+            "would be missing join keys.  Widen the inputs' capacity or "
+            "join without mesh="
+        )
+    return left, (right if how == "inner" else None), int(rows_sent), axis, world
+
+
+def pipeline(steps):
+    """Run an order-preserving operator pipeline: ONE sort per source
+    relation, ZERO sorts between operators.
+
+    ``steps`` is a list; the FIRST entry is the source — an existing
+    :class:`AggResult` or ``("aggregate", kwargs)`` — and each later
+    entry is ``("merge_join", {"right": <AggResult | ("aggregate",
+    kwargs)>, ...})`` or ``("rollup", {"levels": ...})``::
+
+        out = repro.pipeline([
+            ("aggregate", dict(columns=..., by=spec, values=v,
+                               aggs=("count", "sum"))),
+            ("merge_join", {"right": dim_result}),
+            ("rollup", {"levels": [2, 1]}),
+        ])
+
+    Operators past the sources consume the established key order
+    (:attr:`AggResult.sorted_by`): the merge join is a rank-alignment
+    probe and the rollup a chain of segmented combines — neither emits a
+    sort or scatter.  The returned result's ``plan["pipeline"]`` records
+    the stage list, the number of source sorts paid, and the zero
+    re-sort count the composition guarantees."""
+    if not steps:
+        raise ValueError("pipeline needs at least a source step")
+    sources = 0
+
+    def _source(spec):
+        nonlocal sources
+        if isinstance(spec, AggResult):
+            sources += 1
+            return spec
+        if (isinstance(spec, tuple) and len(spec) == 2
+                and spec[0] == "aggregate"):
+            sources += 1
+            return aggregate(**spec[1])
+        raise TypeError(
+            "pipeline source must be an AggResult or ('aggregate', "
+            f"kwargs), got {spec!r}"
+        )
+
+    stages = ["aggregate"]
+    cur = _source(steps[0])
+    for step in steps[1:]:
+        if not (isinstance(step, tuple) and len(step) == 2):
+            raise TypeError(f"pipeline step must be (op, kwargs), got {step!r}")
+        op, kw = step
+        kw = dict(kw)
+        if op == "merge_join":
+            right = _source(kw.pop("right"))
+            cur = cur.merge_join(right, **kw)
+            stages.append(f"merge_join[{cur.how}]")
+        elif op == "rollup":
+            if isinstance(cur, dict):
+                raise TypeError("cannot compose past a rollup fan-out")
+            cur = cur.rollup(**kw)
+            stages.append("rollup")
+        else:
+            raise ValueError(f"unknown pipeline op {op!r}: merge_join|rollup")
+    block = {"stages": stages, "source_sorts": sources, "re_sorts": 0}
+    results = cur.values() if isinstance(cur, dict) else (cur,)
+    for r in results:
+        r.plan = dict(r.plan)
+        r.plan["pipeline"] = block
+    return cur
+
+
+def _iter_prefix_levels(state: AggState, by: KeySpec, levels, backend: str):
+    """Peel minor key columns off a key-sorted state, yielding
+    ``(prefix_names, state, prefix_spec)`` finest level first.  Dropping
+    the least-significant column is a right-shift — monotone on the
+    packed key — so every coarser level is ONE segmented combine of the
+    already-sorted finer level: no sort, no spill (§2.2).  Caller holds
+    :func:`key_dtype_context`."""
+    n_cols = len(by.columns)
+    if levels is None:
+        levels = list(range(n_cols, -1, -1))
+    requested = sorted(set(int(l) for l in levels), reverse=True)
+    if requested[0] > n_cols or requested[-1] < 0:
+        raise ValueError(f"rollup levels {requested} out of range [0, {n_cols}]")
+    spec = by
+    cur = n_cols
+    for lvl in requested:
+        while cur > lvl:
+            # peel the minor column: shift is monotone ⇒ stays sorted
+            dropped = spec.columns[-1]
+            spec = KeySpec(spec.columns[:-1]) if cur > 1 else spec
+            shifted = state.keys >> state.keys.dtype.type(dropped.bits)
+            sentinel = empty_key(state.keys.dtype)
+            if cur == 1:
+                # grand total: a single all-rows group under key 0
+                spec = KeySpec((KeyColumn("__all__", 1),))
+                shifted = jnp.zeros_like(state.keys)
+            keys2 = jnp.where(state.valid(), shifted, sentinel)
+            state = sorted_ops.segmented_combine(
+                AggState(keys2, state.count, state.sum, state.min, state.max),
+                backend=backend,
+            )
+            cur -= 1
+        yield by.names[:lvl], state, spec
 
 
 def _resolve_order_by(order_by, by: KeySpec) -> bool:
@@ -709,14 +1136,6 @@ def rollup(
     cfg = cfg or ExecConfig()
     if not isinstance(aggs, AggSpec):
         aggs = AggSpec(aggs) if isinstance(aggs, str) else AggSpec(*aggs)
-    n_cols = len(by.columns)
-    if levels is None:
-        levels = list(range(n_cols, -1, -1))
-    requested = sorted(set(int(l) for l in levels), reverse=True)
-    if requested[0] > n_cols or requested[-1] < 0:
-        raise ValueError(f"rollup levels {requested} out of range [0, {n_cols}]")
-    levels = requested
-
     fine = aggregate(
         columns, by=by, values=values, aggs=aggs, algorithm=algorithm,
         backend=backend, cfg=cfg, output_estimate=output_estimate,
@@ -724,29 +1143,14 @@ def rollup(
         order_by=True,  # the peel below requires key-sorted input (hash
         # algorithms pay their post-sort here, Fig 19 style)
     )
+    backend = dispatch.resolve_backend_name(backend)
     out: dict[tuple[str, ...], AggResult] = {}
-    state = fine.state
-    spec = by
-    cur = n_cols
     with key_dtype_context(by.key_dtype):
-        for lvl in levels:
-            while cur > lvl:
-                # peel the minor column: shift is monotone ⇒ stays sorted
-                dropped = spec.columns[-1]
-                spec = KeySpec(spec.columns[:-1]) if cur > 1 else spec
-                shifted = state.keys >> state.keys.dtype.type(dropped.bits)
-                sentinel = empty_key(state.keys.dtype)
-                if cur == 1:
-                    # grand total: a single all-rows group under key 0
-                    spec = KeySpec((KeyColumn("__all__", 1),))
-                    shifted = jnp.zeros_like(state.keys)
-                keys2 = jnp.where(state.valid(), shifted, sentinel)
-                state = sorted_ops.segmented_combine(
-                    AggState(keys2, state.count, state.sum, state.min, state.max),
-                    backend=backend,
-                )
-                cur -= 1
-            out[by.names[:lvl]] = AggResult(
-                state=state, stats=fine.stats, by=spec, aggs=aggs, plan=fine.plan
+        for names, state, spec in _iter_prefix_levels(
+            fine.state, by, levels, backend
+        ):
+            out[names] = AggResult(
+                state=state, stats=fine.stats, by=spec, aggs=aggs,
+                plan=fine.plan,
             )
     return out, fine.stats

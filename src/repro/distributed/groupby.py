@@ -67,8 +67,30 @@ def _fill_like(x):
     return jnp.zeros((), x.dtype)
 
 
+def _sample_local_keys(st: AggState, nsamp: int):
+    """``nsamp`` evenly spaced keys from a sorted local state's valid
+    prefix (all-EMPTY shards contribute EMPTY samples, which rank last)."""
+    occ = jnp.maximum(st.occupancy(), 1)
+    pos = jnp.minimum((jnp.arange(nsamp) * occ) // nsamp, st.capacity - 1)
+    return jnp.take(st.keys, pos)
+
+
+def sample_range_cuts(states, axis: str, world: int, *, nsamp: int = 64):
+    """Sampled key-range partition edges over one or MORE sorted local
+    states (sample-sort style).  Each shard contributes a sorted sample
+    per state; the gathered sample's quantiles give identical,
+    data-driven inner edges — shape ``(world - 1,)`` — on every shard.
+    Passing both sides of a join here partitions both relations by the
+    SAME cuts, which is what makes the post-exchange per-owner join a
+    purely local merge join."""
+    sample = jnp.concatenate([_sample_local_keys(st, nsamp) for st in states])
+    all_samp = jnp.sort(jax.lax.all_gather(sample, axis).reshape(-1))
+    eidx = (jnp.arange(1, world) * all_samp.shape[0]) // world
+    return jnp.take(all_samp, eidx)
+
+
 def exchange_sorted_fragments(st: AggState, axis: str, world: int, *, quota: int,
-                              nsamp: int = 64):
+                              nsamp: int = 64, inner_cuts=None):
     """Key-range ``all_to_all`` of a *sorted, duplicate-free* local state.
 
     Range boundaries are SAMPLED (sample-sort style): fixed uniform ranges
@@ -78,6 +100,11 @@ def exchange_sorted_fragments(st: AggState, axis: str, world: int, *, quota: int
     segments are two searchsorted cuts, "partitioning enforced together
     with sorting" (§2.1).  Each peer receives a sorted, EMPTY-padded
     fragment of exactly ``quota`` rows.
+
+    ``inner_cuts`` overrides the sampled edges with precomputed ones
+    (shape ``(world - 1,)``, identical on every shard — see
+    :func:`sample_range_cuts`): the sharded merge join exchanges BOTH
+    sides under one shared cut vector so the two partitionings align.
 
     Returns ``(recv, rows_sent, send_dropped)``:
 
@@ -91,12 +118,8 @@ def exchange_sorted_fragments(st: AggState, axis: str, world: int, *, quota: int
       ``quota >= st.capacity`` it is statically impossible.
     """
     capacity = st.capacity
-    occ = jnp.maximum(st.occupancy(), 1)
-    pos = jnp.minimum((jnp.arange(nsamp) * occ) // nsamp, capacity - 1)
-    sample = jnp.take(st.keys, pos)
-    all_samp = jnp.sort(jax.lax.all_gather(sample, axis).reshape(-1))
-    eidx = (jnp.arange(1, world) * (world * nsamp)) // world
-    inner = jnp.take(all_samp, eidx)
+    inner = (sample_range_cuts((st,), axis, world, nsamp=nsamp)
+             if inner_cuts is None else inner_cuts)
     cuts = jnp.searchsorted(st.keys, inner, side="left").astype(jnp.int32)
     ends = jnp.concatenate([cuts, jnp.asarray([capacity], jnp.int32)])
     starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), cuts])
@@ -165,6 +188,50 @@ def merge_received_fragments(recv: AggState, world: int, quota: int, *,
     ]
     return sorted_ops.merge_absorb_many(frags, backend=backend,
                                         assume_unique=True)
+
+
+def sharded_merge_join_local(a: AggState, b: AggState, axis: str, world: int,
+                             *, how: str = "inner", backend: str = "xla",
+                             nsamp: int = 64):
+    """Per-shard body of the mesh-sharded merge join (call inside
+    ``shard_map``; both inputs are this shard's sorted, duplicate-free,
+    EMPTY-tailed slices of globally sorted relations).
+
+    Sharded join = the existing key-range machinery, run twice under ONE
+    shared cut vector: sample BOTH sides jointly
+    (:func:`sample_range_cuts`), exchange each side by those cuts
+    (:func:`exchange_sorted_fragments`), per-owner merge of each side's
+    received fragments — and then the join is purely local, because
+    owner ``i`` now holds *all* rows of *both* relations in key range
+    ``i``.  No global sort anywhere: established order survives the
+    shuffle, exactly as in the aggregation exchange.
+
+    Returns ``(left, right_or_left, rows_sent, dropped)``: the local join
+    output trimmed back to this shard's slice of the global output
+    capacity (``|a|`` rows — loud flag if a skewed owner's matches
+    exceed its slice), the aligned right side (inner; the left state
+    again for semi/anti so the shape structure is static), the global
+    shuffle volume (both sides, psum'd), and the pmax'd row-loss flag.
+    """
+    from repro.core.merge_join import merge_join
+
+    cuts = sample_range_cuts((a, b), axis, world, nsamp=nsamp)
+    recv_a, sent_a, drop_a = exchange_sorted_fragments(
+        a, axis, world, quota=a.capacity, inner_cuts=cuts)
+    recv_b, sent_b, drop_b = exchange_sorted_fragments(
+        b, axis, world, quota=b.capacity, inner_cuts=cuts)
+    ma = merge_received_fragments(recv_a, world, a.capacity, backend=backend)
+    mb = merge_received_fragments(recv_b, world, b.capacity, backend=backend)
+    left, right = merge_join(ma, mb, how=how, backend=backend)
+    left, trim_l = merge_mod.trim_to_capacity(left, a.capacity)
+    if right is not None:
+        right, trim_r = merge_mod.trim_to_capacity(right, a.capacity)
+    else:
+        right, trim_r = left, jnp.bool_(False)
+    rows_sent = jax.lax.psum(sent_a + sent_b, axis)
+    dropped = jax.lax.pmax(
+        (drop_a | drop_b | trim_l | trim_r).astype(jnp.int32), axis) > 0
+    return left, right, rows_sent, dropped
 
 
 def make_distributed_groupby(mesh, axis: str = "data", *, capacity: int,

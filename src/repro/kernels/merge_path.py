@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.segmented_reduce import _lex_leq, _segmented_scan
+from repro.kernels.segmented_reduce import _lanes_eq, _lanes_empty, _lex_leq, _segmented_scan
 
 
 def _merge_path_split(ka_lanes, kb_lanes):
@@ -158,3 +158,62 @@ def merge_path_tiles(ka, ca, sa, mna, mxa, kb, cb, sb, mnb, mxb, *,
         ),
         interpret=interpret,
     )(*ka_lanes, ca, sa, mna, mxa, *kb_lanes, cb, sb, mnb, mxb)
+
+
+def _make_probe_kernel(nlanes: int, m: int):
+    def _kernel(*refs):
+        ka_refs = refs[:nlanes]
+        kb_refs = refs[nlanes : 2 * nlanes]
+        pos_ref, hit_ref = refs[2 * nlanes :]
+
+        a_lanes = [k[...][0] for k in ka_refs]
+        b_lanes = [k[...][0] for k in kb_refs]
+        n = a_lanes[0].shape[-1]
+        # lower_bound per output lane: smallest j with A[i] <= B[j]
+        # (monotone in j since B is sorted), by the same fixed-round
+        # binary search the merge split uses — all n lanes in parallel.
+        lo = jnp.zeros((n,), jnp.int32)
+        hi = jnp.full((n,), m, jnp.int32)
+        for _ in range(int(math.ceil(math.log2(m + 1))) + 1):
+            mid = (lo + hi) >> 1
+            b_mid = [jnp.take(b, jnp.clip(mid, 0, m - 1)) for b in b_lanes]
+            leq = _lex_leq(a_lanes, b_mid)
+            hi = jnp.where(leq, mid, hi)
+            lo = jnp.where(leq, lo, mid + 1)
+        pos = jnp.clip(lo, 0, m - 1)
+        probed = [jnp.take(b, pos) for b in b_lanes]
+        hit = _lanes_eq(a_lanes, probed) & ~_lanes_empty(a_lanes)
+        pos_ref[...] = pos[None]
+        hit_ref[...] = hit[None]
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_path_probe_tiles(ka, kb, *, interpret: bool = True):
+    """Two-sided merge-join probe: rank-align each key of sorted tile set
+    ``ka`` — (T,N) uint32 array or tuple of lanes (hi first) — against
+    sorted tile set ``kb`` (T,M).  Returns ``(pos, hit)`` of shape (T,N):
+    ``kb[pos[i]] == ka[i]`` where ``hit`` (EMPTY keys never hit).  The
+    per-lane binary search is the probe half of the merge-path diagonal
+    split; no sort and no scatter, O(log M) rounds in one VMEM residency.
+    """
+    ka_lanes = tuple(ka) if isinstance(ka, (tuple, list)) else (ka,)
+    kb_lanes = tuple(kb) if isinstance(kb, (tuple, list)) else (kb,)
+    assert len(ka_lanes) == len(kb_lanes)
+    nlanes = len(ka_lanes)
+    t, n = ka_lanes[0].shape
+    m = kb_lanes[0].shape[-1]
+    a_spec = pl.BlockSpec((1, n), lambda i: (i, 0))
+    b_spec = pl.BlockSpec((1, m), lambda i: (i, 0))
+    return pl.pallas_call(
+        _make_probe_kernel(nlanes, m),
+        out_shape=(
+            jax.ShapeDtypeStruct((t, n), jnp.int32),
+            jax.ShapeDtypeStruct((t, n), jnp.bool_),
+        ),
+        grid=(t,),
+        in_specs=[a_spec] * nlanes + [b_spec] * nlanes,
+        out_specs=(a_spec, a_spec),
+        interpret=interpret,
+    )(*ka_lanes, *kb_lanes)

@@ -216,6 +216,27 @@ def merge_absorb_sorted_bitonic(a: AggState, b: AggState) -> AggState:
     return jax.tree.map(lambda x: x[: min(cap_out, 2 * n)], out)
 
 
+def join_probe(a_keys: jax.Array, b_keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Merge-join probe via the merge-path kernel's lane-parallel binary
+    search: rank-align each (sorted) a-key against the (sorted) b-keys.
+    Returns ``(pos, hit)`` shaped like ``a_keys`` with ``pos`` clipped
+    into b's row range (see :func:`repro.core.merge_join.join_probe`).
+    EMPTY pow2 padding on either side is benign: EMPTY ranks to the tail
+    and never equals a valid key, so padded rows cannot hit."""
+    n0, m0 = a_keys.shape[0], b_keys.shape[0]
+    n, m = _next_pow2(n0), _next_pow2(m0)
+    ka = tuple(
+        jnp.full((1, n), EMPTY, jnp.uint32).at[0, :n0].set(lane)
+        for lane in _key_lanes(a_keys)
+    )
+    kb = tuple(
+        jnp.full((1, m), EMPTY, jnp.uint32).at[0, :m0].set(lane)
+        for lane in _key_lanes(b_keys)
+    )
+    pos, hit = _mp.merge_path_probe_tiles(ka, kb, interpret=INTERPRET)
+    return jnp.clip(pos[0, :n0], 0, max(m0 - 1, 0)), hit[0, :n0]
+
+
 def _pad_state(state: AggState, n: int) -> AggState:
     if state.capacity == n:
         return state

@@ -1,0 +1,58 @@
+"""Shared jaxpr-primitive assertions for the "no sort / no scatter"
+invariants.
+
+The engine's central claim is *structural*: operators over already-sorted
+inputs (merge-absorb, segmented combine, intersect probe, merge join)
+must compile to programs containing NO sort and — on the XLA path — NO
+scatter primitive, because the established order lets rank-gather +
+compaction-gather do all the work.  These helpers walk a jaxpr
+recursively (through pjit/scan/cond/pallas_call sub-jaxprs) so the
+assertion also covers kernel bodies, and are shared by
+test_ordered_index.py, test_schema.py, and test_join.py.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def collect_primitives(jaxpr, acc: set | None = None) -> set:
+    """Every primitive name reachable from ``jaxpr``, including nested
+    sub-jaxprs inside call/control-flow/pallas params."""
+    acc = set() if acc is None else acc
+    for eqn in jaxpr.eqns:
+        acc.add(eqn.primitive.name)
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for vv in vs:
+                if hasattr(vv, "eqns"):
+                    collect_primitives(vv, acc)
+                elif hasattr(vv, "jaxpr"):
+                    collect_primitives(vv.jaxpr, acc)
+    return acc
+
+
+def primitives_of(fn, *args, **kwargs) -> set:
+    """Trace ``fn(*args, **kwargs)`` and return its full primitive set."""
+    return collect_primitives(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)
+
+
+def assert_no_sort(prims: set, *, context: str = ""):
+    assert "sort" not in prims, (
+        f"found sort primitive {context}: {sorted(prims)}"
+    )
+
+
+def assert_no_scatter(prims: set, *, context: str = ""):
+    scatters = {p for p in prims if "scatter" in p}
+    assert not scatters, (
+        f"found scatter primitives {context}: {sorted(scatters)}"
+    )
+
+
+def assert_no_sort_no_scatter(fn, *args, context: str = "", **kwargs) -> set:
+    """The combined invariant: trace ``fn`` and require a sort-free,
+    scatter-free program.  Returns the primitive set for further checks."""
+    prims = primitives_of(fn, *args, **kwargs)
+    assert_no_sort(prims, context=context)
+    assert_no_scatter(prims, context=context)
+    return prims

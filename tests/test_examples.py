@@ -35,3 +35,13 @@ def test_quickstart_smoke_including_streamed_ingest():
     # the streamed-ingest snippet ran and matched the resident relation
     assert "streamed ingest" in out
     assert "identical relation" in out
+
+
+def test_intersect_warehouse_smoke():
+    out = run_example("intersect_warehouse.py", {"INTERSECT_N": "20000"})
+    assert "sort-based plan spill:" in out
+    # the composed pipeline consumed the sources' order: no re-sorts, and
+    # the join side's recorded cost model has a zero sort term
+    assert "'re_sorts': 0" in out
+    assert "join-side sort term: 0 rows" in out
+    assert "order-preserving pipeline OK" in out

@@ -75,17 +75,7 @@ def test_merge_gather_indices_inverts_ranks():
     assert sorted(src.tolist()) == list(range(500))  # a permutation
 
 
-def _collect_primitives(jaxpr, acc):
-    for eqn in jaxpr.eqns:
-        acc.add(eqn.primitive.name)
-        for v in eqn.params.values():
-            vs = v if isinstance(v, (list, tuple)) else (v,)
-            for vv in vs:
-                if hasattr(vv, "eqns"):
-                    _collect_primitives(vv, acc)
-                elif hasattr(vv, "jaxpr"):
-                    _collect_primitives(vv.jaxpr, acc)
-    return acc
+from _jaxpr_checks import assert_no_scatter, assert_no_sort, collect_primitives
 
 
 @pytest.mark.parametrize("key_dtype", KEY_DTYPES)
@@ -104,13 +94,12 @@ def test_merge_absorb_performs_no_sort(backend, assume_unique, key_dtype):
                 x, y, backend=backend, assume_unique=assume_unique
             )
         )(a, b)
-    prims = _collect_primitives(jx.jaxpr, set())
-    assert "sort" not in prims, f"found sort primitive via backend={backend}: {prims}"
+    prims = collect_primitives(jx.jaxpr)
+    assert_no_sort(prims, context=f"via backend={backend}")
     if backend == "xla":
         # the XLA engine is also scatter-free end to end: rank-gather
         # interleave + segmented-scan combine + compaction gather
-        scatters = {p for p in prims if "scatter" in p}
-        assert not scatters, f"found scatter primitives on xla path: {scatters}"
+        assert_no_scatter(prims, context="on xla path")
 
 
 @pytest.mark.parametrize("key_dtype", KEY_DTYPES)
@@ -132,10 +121,9 @@ def test_segmented_combine_xla_scatter_free_and_correct(key_dtype):
             lambda s: sorted_ops.segmented_combine(s, backend="xla")
         )(st)
         out = sorted_ops.segmented_combine(st, backend="xla")
-    prims = _collect_primitives(jx.jaxpr, set())
-    scatters = {p for p in prims if "scatter" in p}
-    assert not scatters, f"segmented_combine_xla scatters: {scatters}"
-    assert "sort" not in prims
+    prims = collect_primitives(jx.jaxpr)
+    assert_no_scatter(prims, context="in segmented_combine_xla")
+    assert_no_sort(prims)
     validate_against_oracle(out, keys, pay)
     # per-group min/max survive the scan rewrite
     got_valid = np.asarray(out.valid())
@@ -152,7 +140,7 @@ def test_absorb_of_unsorted_does_sort():
     """Sanity check on the detector: the full-argsort path IS a sort."""
     st = rows_to_state(jnp.asarray(RNG.integers(0, 9, 64).astype(np.uint32)), None)
     jx = jax.make_jaxpr(lambda x: sorted_ops.absorb(x))(st)
-    assert "sort" in _collect_primitives(jx.jaxpr, set())
+    assert "sort" in collect_primitives(jx.jaxpr)
 
 
 # ---------------------------------------------------------------------------

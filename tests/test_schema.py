@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import pytest
 
 from _hypothesis_shim import given, settings, st
+from _jaxpr_checks import assert_no_sort_no_scatter
 
 import repro
 from repro.core import ExecConfig, sorted_ops
@@ -320,9 +321,10 @@ def test_intersect_merge_probe_no_sort_no_isin():
 
     ka = np.sort(RNG.choice(500, 80, replace=False)).astype(np.uint32)
     kb = np.sort(RNG.choice(500, 120, replace=False)).astype(np.uint32)
-    jx = jax.make_jaxpr(_merge_probe_intersect)(jnp.asarray(ka), jnp.asarray(kb))
-    prims = {eqn.primitive.name for eqn in jx.jaxpr.eqns}
-    assert "sort" not in prims, prims
+    assert_no_sort_no_scatter(
+        _merge_probe_intersect, jnp.asarray(ka), jnp.asarray(kb),
+        context="in _merge_probe_intersect",
+    )
     got = np.asarray(_merge_probe_intersect(jnp.asarray(ka), jnp.asarray(kb)))
     got = got[got != EMPTY]
     np.testing.assert_array_equal(got, np.intersect1d(ka, kb))
