@@ -9,7 +9,15 @@ meshes of increasing world size and reports, per world:
   all_to_all.  Each shard aggregates its slice *before* the exchange
   (the paper's "aggregate early and locally"), so on duplicate-heavy
   workloads the wire carries only unique-per-shard rows: the shuffle
-  reduction the distributed-aggregation studies in PAPERS.md measure.
+  reduction the distributed-aggregation studies in PAPERS.md measure;
+* the capacity-bounded exchange accounting — the derived per-peer
+  ``quota``, the fullest observed send segment (``max_fill``), their
+  ratio ``fill_frac``, and the analytic per-shard exchange footprint.
+
+A Zipf skew sweep (``--zipf-sweep``, default s ∈ {0, 0.8, 1.2}) then
+stresses the sampled cuts at the LARGEST world: heavier skew
+concentrates keys, so ``fill_frac`` rises toward the headroom bound and
+``exchange_retries`` counts how often the quota ladder had to step.
 
 Off-TPU this forces fake host devices (the test-suite trick), so wall
 times are thread-level parallelism at best — the shuffle accounting is
@@ -18,6 +26,7 @@ the portable signal.  Writes ``BENCH_shard.json`` unless ``--smoke``.
 Usage:  PYTHONPATH=src python benchmarks/bench_shard.py
             [--n 262144] [--m 4096] [--dup 16] [--worlds 1,2,8]
             [--policy rs] [--iters 3] [--backend xla] [--out FILE]
+            [--zipf-sweep 0,0.8,1.2]
 """
 from __future__ import annotations
 
@@ -43,6 +52,9 @@ def main() -> int:
     p.add_argument("--iters", type=int, default=3)
     p.add_argument("--backend", type=str, default="xla",
                    choices=("xla", "pallas", "auto"))
+    p.add_argument("--zipf-sweep", type=str, default="0,0.8,1.2",
+                   help="comma-separated Zipf skew exponents swept at the "
+                        "largest world (empty string disables)")
     p.add_argument("--smoke", action="store_true",
                    help="tiny sizes / few iters — CI sanity run, not a "
                         "measurement; writes no JSON unless --out is given")
@@ -50,6 +62,7 @@ def main() -> int:
     if args.smoke:
         args.n, args.m, args.iters, args.worlds = 1 << 12, 1 << 8, 1, "1,2"
     worlds = [int(w) for w in args.worlds.split(",")]
+    zipf_ss = [float(s) for s in args.zipf_sweep.split(",") if s]
 
     # Fake host devices MUST be configured before jax initializes — hence
     # no module-level jax/_harness import in this one benchmark.  A
@@ -76,6 +89,7 @@ def main() -> int:
     import _harness
     from repro.core import pipeline
     from repro.core.types import ExecConfig
+    from repro.distributed import groupby as gb
 
     if len(jax.devices()) < need:
         # unreachable unless jax was initialized before main(); a skip,
@@ -119,15 +133,75 @@ def main() -> int:
         _, dstats = run()
         stats = dstats.finalize()
         ratio = stats.rows_exchanged / n
+        quota = stats.exchange_quota
         results.append({
             "world": world, "seconds": t, "rows_input": n,
             "rows_shuffled": stats.rows_exchanged, "shuffle_ratio": ratio,
             "total_spill_rows": stats.total_spill_rows,
             "runs_generated": stats.runs_generated,
+            "exchange_quota": quota,
+            "exchange_max_fill": stats.exchange_max_fill,
+            "fill_frac": round(stats.exchange_max_fill / quota, 4)
+            if quota else 0.0,
+            "exchange_footprint_rows": gb.exchange_footprint_rows(world, quota)
+            if quota else 0,
         })
         print(f"{world:>6} {t * 1e3:>9.1f}ms {n:>9} "
               f"{stats.rows_exchanged:>14} {ratio:>10.3f} "
               f"{stats.total_spill_rows:>9}")
+
+    # ---- Zipf skew sweep at the largest world: how close the sampled
+    # cuts drive each send segment to the capacity-derived quota ----
+    zipf_sweep = []
+    if zipf_ss and max(worlds) > 1:
+        world = max(worlds)
+        mesh = jax.make_mesh((world,), ("shard",))
+        ranks = np.arange(1, domain + 1, dtype=np.float64)
+        hdr = (f"{'zipf s':>7} {'per-call':>11} {'rows_shuffled':>14} "
+               f"{'quota':>7} {'max_fill':>9} {'fill':>6} {'retries':>8}")
+        print(f"\nZipf skew sweep at world={world}")
+        print(hdr)
+        print("-" * len(hdr))
+        for s in zipf_ss:
+            prob = ranks ** -s
+            zkeys = rng.choice(domain, size=n, p=prob / prob.sum()) \
+                .astype(np.uint32)
+            zpay = (rng.normal(size=(n, args.width)).astype(np.float32)
+                    if args.width else None)
+            zest = len(np.unique(zkeys))
+            dk = jax.device_put(zkeys, NamedSharding(mesh, P("shard")))
+            dp = (None if zpay is None else
+                  jax.device_put(zpay, NamedSharding(mesh, P("shard", None))))
+
+            # timing on the device-only program; stats (including the
+            # retry ladder, which needs the host readback) via the
+            # insort entry point
+            def zrun():
+                st, dstats = pipeline.aggregate_device(
+                    dk, dp, cfg, policy=args.policy, backend=args.backend,
+                    output_estimate=zest, mesh=mesh)
+                return st.keys, dstats
+
+            t = _harness.time_fn(zrun, iters=args.iters, block_each=True)
+            _, stats = pipeline.insort_aggregate_device(
+                dk, dp, cfg, policy=args.policy, backend=args.backend,
+                output_estimate=zest, mesh=mesh)
+            quota = stats.exchange_quota
+            fill = stats.exchange_max_fill
+            zipf_sweep.append({
+                "zipf_s": s, "world": world, "seconds": t,
+                "rows_input": n, "rows_shuffled": stats.rows_exchanged,
+                "shuffle_ratio": stats.rows_exchanged / n,
+                "exchange_quota": quota, "exchange_max_fill": fill,
+                "fill_frac": round(fill / quota, 4) if quota else 0.0,
+                "exchange_retries": stats.exchange_retries,
+                "exchange_footprint_rows":
+                    gb.exchange_footprint_rows(world, quota) if quota else 0,
+            })
+            print(f"{s:>7.2f} {t * 1e3:>9.1f}ms {stats.rows_exchanged:>14} "
+                  f"{quota:>7} {fill:>9} "
+                  f"{(fill / quota if quota else 0):>6.2f} "
+                  f"{stats.exchange_retries:>8}")
 
     report = {
         "bench": "shard_scaling",
@@ -139,6 +213,7 @@ def main() -> int:
                            "thread-level parallelism; shuffle accounting "
                            "is the portable signal"},
         "results": results,
+        "zipf_sweep": zipf_sweep,
     }
     _harness.write_json_report(report, out=args.out, smoke=args.smoke,
                                default_name="BENCH_shard.json")

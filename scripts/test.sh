@@ -7,8 +7,11 @@
 #                                 benches (so benchmark code cannot rot)
 #   scripts/test.sh --shard       mesh-sharded selector: sharded parity /
 #                                 edge / transfer-guard tests (forced fake
-#                                 host devices in subprocesses) plus the
-#                                 shard benchmark in smoke mode
+#                                 host devices in subprocesses — including
+#                                 the world=32 parity + Zipf-skew grids
+#                                 and the exchange quota/retry tests)
+#                                 plus the shard benchmark in smoke mode
+#                                 (which runs the Zipf skew sweep)
 #   scripts/test.sh --stream      streamed-pipeline selector: streamed vs
 #                                 resident parity + single-readback tests,
 #                                 then the streaming bench in smoke mode

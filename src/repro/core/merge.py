@@ -76,6 +76,24 @@ def stack_runs(runs: list[Run], page_rows: int, width: int) -> RunStore:
     return RunStore(state=state, lens=lens)
 
 
+def fragments_to_store(recv: AggState, world: int, quota: int):
+    """View ``world`` concatenated fixed-``quota`` sorted fragments (the
+    cross-shard exchange's receive buffer, fields shaped
+    ``(world * quota, ...)``) as the stacked run-store layout the wide
+    merge consumes: fields reshaped to ``(R=world, C=quota)`` plus the
+    per-fragment live lengths (fragments are left-packed, EMPTY-padded).
+    ``quota`` must be a multiple of the merge page size the caller will
+    use — :func:`_page_of`'s clamped ``dynamic_slice`` double-reads rows
+    otherwise."""
+    store = jax.tree.map(
+        lambda x: x.reshape((world, quota) + x.shape[1:]), recv
+    )
+    lens = jnp.sum(
+        store.keys != empty_key(store.keys.dtype), axis=1, dtype=jnp.int32
+    )
+    return store, lens
+
+
 def _page_of(store_state: AggState, r, start, page_rows: int) -> AggState:
     """DMA one page (P rows) of run ``r`` into the shared input buffer."""
 

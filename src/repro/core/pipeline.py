@@ -72,6 +72,7 @@ from repro.core import sorted_ops
 from repro.core.types import (
     AggState,
     DeviceSpillStats,
+    ExchangeOverflowError,
     ExecConfig,
     MergeOverflowError,
     SpillStats,
@@ -558,6 +559,9 @@ def _merge_phase(store, lens, spilled, nruns, overflow, *, page_rows: int,
         merge_dropped_rows=dropped,
         rows_exchanged=zero,
         rows_retired=zero if rows_retired is None else rows_retired,
+        exchange_dropped=jnp.bool_(False),
+        exchange_quota=zero,
+        exchange_max_fill=zero,
     )
     return out, stats
 
@@ -619,6 +623,9 @@ def _pipeline_body(
             merge_dropped_rows=jnp.bool_(False),
             rows_exchanged=zero,
             rows_retired=zero,
+            exchange_dropped=jnp.bool_(False),
+            exchange_quota=zero,
+            exchange_max_fill=zero,
         )
         return store, lens, table, rg_stats
 
@@ -668,6 +675,7 @@ def _sharded_fn(
     premerge_levels: int,
     backend: str,
     widths,
+    exchange_quota: int | None = None,
 ):
     """ONE compiled program for the whole mesh (§2.1: partitioning and
     sorting are the same physical property):
@@ -682,14 +690,19 @@ def _sharded_fn(
        exchange_sorted_fragments` — the same searchsorted cuts +
        ``all_to_all`` as the distributed group-by), so only unique rows
        travel;
-    3. each range owner tree-merges the ``world`` sorted fragments it
-       received — output globally sorted by (owner, key), EMPTY-padded
-       per shard.
+    3. each range owner PAGE-STREAMS the ``world`` sorted fragments it
+       received through the §4 wide merge — output globally sorted by
+       (owner, key), EMPTY-padded per shard.
 
-    The per-peer quota equals each shard's full output capacity, so the
-    exchange can never cut live rows; ``send_dropped`` is still folded
-    into ``merge_dropped_rows`` defensively.  Stats are reduced across
-    shards on device (:meth:`DeviceSpillStats.cross_shard`), so
+    The per-peer quota is capacity-bounded
+    (:func:`~repro.distributed.groupby.default_exchange_quota` unless
+    ``exchange_quota`` overrides — the host retry path passes a wider
+    one), so the wire + fragment-merge footprint per shard is
+    O(quota_bound + merge_page) instead of O(world × capacity); a send
+    segment over quota trips ``exchange_dropped``, which ``finalize()``
+    raises as the retryable
+    :class:`~repro.core.types.ExchangeOverflowError`.  Stats are reduced
+    across shards on device (:meth:`DeviceSpillStats.cross_shard`), so
     ``finalize()`` remains the program's single host readback and the
     loud-failure invariants hold per shard and globally.
     """
@@ -708,13 +721,17 @@ def _sharded_fn(
             premerge_levels=premerge_levels, backend=backend,
             widths=widths, merge=True,
         )
-        merged, sent, send_dropped = gb_mod.exchange_and_merge(
-            out, axis, world, backend=backend
+        merged, ex = gb_mod.exchange_and_merge(
+            out, axis, world, backend=backend, quota=exchange_quota,
+            page_rows=page_rows,
         )
         dstats = dataclasses.replace(
             dstats,
-            merge_dropped_rows=dstats.merge_dropped_rows | send_dropped,
-            rows_exchanged=sent,
+            merge_dropped_rows=dstats.merge_dropped_rows | ex.merge_dropped,
+            rows_exchanged=ex.rows_sent,
+            exchange_dropped=ex.send_dropped,
+            exchange_quota=jnp.int32(ex.quota),
+            exchange_max_fill=ex.max_fill,
         )
         return merged, dstats.cross_shard(axis)
 
@@ -723,13 +740,12 @@ def _sharded_fn(
         min=P(axis, None), max=P(axis, None),
     )
     n_stats = len(dataclasses.fields(DeviceSpillStats))
-    # check=False: 0.4.x shard_map has no replication rule for while_loop
-    # (the wide merge's page loop); the stats out_specs are P() and truly
-    # replicated anyway (psum/pmax above).
+    # the replication-check default is version-gated in _compat.shard_map
+    # (0.4.x check_rep has no while_loop rule); the stats out_specs are
+    # P() and truly replicated anyway (psum/pmax above).
     inner = shard_map(
         body, mesh=mesh, in_specs=(P(axis), P(axis, None)),
         out_specs=(state_specs, DeviceSpillStats(*(P(),) * n_stats)),
-        check=False,
     )
 
     def run(keys, payload):
@@ -833,6 +849,7 @@ def aggregate_device(
     output_estimate: int | None = None,
     mesh=None,
     mesh_axis: str | None = None,
+    exchange_quota: int | None = None,
 ) -> tuple[AggState, DeviceSpillStats]:
     """Run generation + pre-merge levels + wide merge as ONE compiled
     program (§3 + §4).
@@ -850,11 +867,13 @@ def aggregate_device(
     over ``mesh_axis`` (default: the mesh's first axis): every device
     runs run generation + pre-merge + wide merge over its slice of the
     input, then a sampled key-range ``all_to_all`` exchanges the sorted,
-    duplicate-free per-shard outputs and each range owner merges its
-    fragments — output globally sorted by (owner, key), each shard's
-    slice EMPTY-padded.  Stats are psum/pmax-reduced across shards on
-    device, so this still performs zero host syncs.  ``mesh=None`` is
-    bit-for-bit today's single-device program.
+    duplicate-free per-shard outputs (capacity-bounded per-peer quota —
+    ``exchange_quota`` overrides the sampled-cut default) and each range
+    owner page-streams its fragments through the §4 wide merge — output
+    globally sorted by (owner, key), each shard's slice EMPTY-padded.
+    Stats are psum/pmax-reduced across shards on device, so this still
+    performs zero host syncs.  ``mesh=None`` is bit-for-bit today's
+    single-device program.
     """
     cfg = cfg or ExecConfig()
     if policy not in POLICIES:
@@ -906,10 +925,22 @@ def aggregate_device(
         memory_rows=cfg.memory_rows, batch_rows=cfg.batch_rows,
         page_rows=cfg.page_rows, index_rows=index_rows or cfg.memory_rows,
         fanin=cfg.fanin, premerge_levels=pre,
-        backend=backend, widths=widths,
+        backend=backend, widths=widths, exchange_quota=exchange_quota,
     )
     with key_dtype_context(np.dtype(keys.dtype)):
         return fn(as_key_array(keys), payload)
+
+
+def _shard_out_capacity(policy: str, n: int, world: int,
+                        cfg: ExecConfig) -> int:
+    """Host twin of the mesh pipeline's per-shard merge output capacity
+    (``max(n_pad, 1)`` inside :func:`_pipeline_body` for the shard's
+    padded slice) — the statically lossless ceiling of the exchange
+    retry ladder (a quota >= the per-shard capacity cannot drop)."""
+    n_loc = -(-n // world)
+    chunk, _, _, _ = _engine_geometry(policy, cfg.memory_rows,
+                                      cfg.batch_rows, cfg.page_rows)
+    return max(_num_batches(n_loc, chunk) * chunk, 1)
 
 
 def insort_aggregate_device(
@@ -924,15 +955,48 @@ def insort_aggregate_device(
     output_estimate: int | None = None,
     mesh=None,
     mesh_axis: str | None = None,
+    exchange_quota: int | None = None,
 ) -> tuple[AggState, SpillStats]:
     """:func:`aggregate_device` + the one host readback of spill stats —
-    the device twin of :func:`repro.core.insort.insort_aggregate`."""
+    the device twin of :func:`repro.core.insort.insort_aggregate`.
+
+    On a mesh, a cross-shard exchange whose sampled quota proved too
+    small for the data's skew retries ONCE at the next pow2 quota
+    (capped at the statically lossless per-shard capacity) with a loud
+    log — the readback already paid here is the same one the retry
+    needs, so this is the natural host decision point.  A second
+    overflow propagates the :class:`ExchangeOverflowError`."""
     state, dstats = aggregate_device(
         keys, payload, cfg, policy=policy, backend=backend, widths=widths,
         index_rows=index_rows, output_estimate=output_estimate,
-        mesh=mesh, mesh_axis=mesh_axis,
+        mesh=mesh, mesh_axis=mesh_axis, exchange_quota=exchange_quota,
     )
-    return state, dstats.finalize()
+    try:
+        return state, dstats.finalize()
+    except ExchangeOverflowError as e:
+        if mesh is None:
+            raise  # impossible without an exchange; don't mask bugs
+        cfg_ = cfg or ExecConfig()
+        axis = resolve_mesh_axis(mesh, mesh_axis)
+        world = int(mesh.shape[axis])
+        cap_loc = _shard_out_capacity(policy, np.asarray(keys).shape[0],
+                                      world, cfg_)
+        quota2 = min(_pow2_ceil(e.quota + 1), _pow2_ceil(cap_loc))
+        if quota2 <= e.quota:
+            raise  # already at the lossless ceiling; a retry cannot help
+        _log.warning(
+            "mesh exchange overflowed its per-peer quota=%d (fullest "
+            "segment %d rows); retrying once at quota=%d",
+            e.quota, e.max_fill, quota2,
+        )
+        state, dstats = aggregate_device(
+            keys, payload, cfg, policy=policy, backend=backend,
+            widths=widths, index_rows=index_rows,
+            output_estimate=output_estimate, mesh=mesh, mesh_axis=mesh_axis,
+            exchange_quota=quota2,
+        )
+        stats = dstats.finalize()
+        return state, dataclasses.replace(stats, exchange_retries=1)
 
 
 # ---------------------------------------------------------------------------
@@ -1467,6 +1531,27 @@ class StreamingAggregator:
             self._arm = self._governor.start_arm(
                 output_estimate=output_estimate)
         else:
+            if governor is not None:
+                # refusing loudly here is the satellite contract: a
+                # governor that silently never steers is indistinguishable
+                # from a working adaptive stream until the bench lies.
+                if mesh is not None:
+                    raise ValueError(
+                        "governor= was passed on a mesh= stream, but the "
+                        "adaptive governor does not compose with mesh= "
+                        "yet (it needs a cross-shard observation reduce — "
+                        "a documented ROADMAP follow-on).  It would have "
+                        "silently run the fixed policy "
+                        f"{policy!r}; pick a fixed policy and drop "
+                        "governor=, or run unsharded with "
+                        "policy='adaptive'"
+                    )
+                raise ValueError(
+                    f"governor= was passed with fixed policy {policy!r}; "
+                    "it would have been silently ignored — use "
+                    "policy='adaptive' to let the governor steer, or "
+                    "drop governor="
+                )
             self._governor = None
             self._arm = policy
 
@@ -1793,10 +1878,32 @@ class StreamingAggregator:
         state, dstats = self._run_merge(es, pre + 1, out_cap2, trim)
         return state, dstats.finalize(entry_point=entry_point)
 
+    def _retry_exchange(self, entry_point: str, err, es,
+                        pre: int, out_cap: int, trim: int):
+        """The mesh exchange's capacity-bounded quota was too small for
+        the data's skew: re-run the (non-donating) merge + exchange
+        program ONCE at the next pow2 quota, capped at the statically
+        lossless per-shard output capacity.  Loud by design; a second
+        overflow propagates (same contract as :meth:`_retry_capacity`)."""
+        quota2 = min(_pow2_ceil(err.quota + 1), _pow2_ceil(out_cap))
+        if quota2 <= err.quota:
+            raise err  # already at the lossless ceiling
+        _log.warning(
+            "%s exchange overflowed its per-peer quota=%d (fullest "
+            "segment %d rows); retrying once at quota=%d",
+            entry_point, err.quota, err.max_fill, quota2,
+        )
+        state, dstats = self._run_merge(es, pre, out_cap, trim,
+                                        exchange_quota=quota2)
+        stats = dstats.finalize(entry_point=entry_point)
+        return state, dataclasses.replace(
+            stats, exchange_retries=stats.exchange_retries + 1)
+
     def finalize(self) -> tuple[AggState, SpillStats]:
         """:meth:`finalize_device` + the ONE host readback of spill stats
-        (raises loudly on run-buffer overflow; a merge-output overflow is
-        retried once at the next pow2 capacity before raising)."""
+        (raises loudly on run-buffer overflow; a merge-output overflow —
+        or, on a mesh, an exchange-quota overflow — is retried once at
+        the next pow2 before raising)."""
         if self._finalized:
             raise RuntimeError("StreamingAggregator already finalized")
         if self._es is None:  # nothing absorbed: empty result
@@ -1808,6 +1915,9 @@ class StreamingAggregator:
         state, dstats = self._run_merge(es, pre, out_cap, trim)
         try:
             stats = dstats.finalize()
+        except ExchangeOverflowError as e:
+            state, stats = self._retry_exchange(
+                "finalize", e, es, pre, out_cap, trim)
         except MergeOverflowError as e:
             state, stats = self._retry_capacity(
                 "finalize", e, es, pre, out_cap, trim)
@@ -1838,8 +1948,11 @@ class StreamingAggregator:
             trim = min(r_static, self._R)  # merge the exact bound, not pow2
         return pre, out_cap, trim
 
-    def _run_merge(self, es, pre: int, out_cap: int, trim: int):
-        """Dispatch the (non-donating) drain + merge program on ``es``."""
+    def _run_merge(self, es, pre: int, out_cap: int, trim: int,
+                   exchange_quota: int | None = None):
+        """Dispatch the (non-donating) drain + merge program on ``es``.
+        ``exchange_quota`` overrides the mesh exchange's derived per-peer
+        quota (the :meth:`_retry_exchange` path)."""
         with key_dtype_context(self.key_dtype):
             if self.mesh is None:
                 return _finalize_stream(
@@ -1849,9 +1962,10 @@ class StreamingAggregator:
                     backend=self.backend, out_capacity=out_cap, trim=trim,
                 )
             if self._retired is None:
-                return self._fns.finalize(pre, out_cap, trim, False)(es)
-            return self._fns.finalize(pre, out_cap, trim, True)(
-                es, self._retired)
+                return self._fns.finalize(
+                    pre, out_cap, trim, False, exchange_quota)(es)
+            return self._fns.finalize(
+                pre, out_cap, trim, True, exchange_quota)(es, self._retired)
 
     def snapshot_device(self) -> tuple[AggState, DeviceSpillStats]:
         """Merge-on-read snapshot: answer the current aggregate WITHOUT
@@ -1885,6 +1999,10 @@ class StreamingAggregator:
         state, dstats = self.snapshot_device()
         try:
             stats = dstats.finalize(entry_point="snapshot")
+        except ExchangeOverflowError as e:
+            pre, out_cap, trim = self._merge_plan(bucketed=True)
+            state, stats = self._retry_exchange(
+                "snapshot", e, self._es, pre, out_cap, trim)
         except MergeOverflowError as e:
             pre, out_cap, trim = self._merge_plan(bucketed=True)
             state, stats = self._retry_capacity(
@@ -2206,7 +2324,7 @@ def _mesh_stream_fns(
             return expand_engine_scalars(es)
 
         return jax.jit(shard_map(
-            body, mesh=mesh, in_specs=(), out_specs=state_spec, check=False,
+            body, mesh=mesh, in_specs=(), out_specs=state_spec,
         ))
 
     @functools.lru_cache(maxsize=None)
@@ -2223,7 +2341,7 @@ def _mesh_stream_fns(
             shard_map(
                 body, mesh=mesh,
                 in_specs=(state_spec, P(axis, None), P(axis, None, None)),
-                out_specs=state_spec, check=False,
+                out_specs=state_spec,
             ),
             donate_argnums=(0,),
         )
@@ -2240,12 +2358,13 @@ def _mesh_stream_fns(
         # no donation: shapes change across the grow
         return jax.jit(
             shard_map(body, mesh=mesh, in_specs=(state_spec,),
-                      out_specs=state_spec, check=False),
+                      out_specs=state_spec),
         )
 
     @functools.lru_cache(maxsize=None)
     def finalize_fn(premerge_levels: int, out_capacity: int, trim: int,
-                    with_retired: bool = False):
+                    with_retired: bool = False,
+                    exchange_quota: int | None = None):
         def body(es, *rest):
             es = _trim_slots(squeeze_engine_scalars(es), trim)
             fresh_out = empty_state(out_capacity, width, key_dtype=kd,
@@ -2263,13 +2382,17 @@ def _mesh_stream_fns(
                 out_capacity=out_capacity, rows_retired=retired,
                 out_buffer=fresh_out,
             )
-            merged, sent, send_dropped = gb_mod.exchange_and_merge(
-                out, axis, world, backend=backend
+            merged, ex = gb_mod.exchange_and_merge(
+                out, axis, world, backend=backend, quota=exchange_quota,
+                page_rows=page_rows,
             )
             dstats = dataclasses.replace(
                 dstats,
-                merge_dropped_rows=dstats.merge_dropped_rows | send_dropped,
-                rows_exchanged=sent,
+                merge_dropped_rows=dstats.merge_dropped_rows | ex.merge_dropped,
+                rows_exchanged=ex.rows_sent,
+                exchange_dropped=ex.send_dropped,
+                exchange_quota=jnp.int32(ex.quota),
+                exchange_max_fill=ex.max_fill,
             )
             return merged, dstats.cross_shard(axis)
 
@@ -2281,7 +2404,6 @@ def _mesh_stream_fns(
             shard_map(
                 body, mesh=mesh, in_specs=in_specs,
                 out_specs=(agg_spec, DeviceSpillStats(*(P(),) * n_stats)),
-                check=False,
             ),
         )
 
@@ -2301,7 +2423,7 @@ def _mesh_stream_fns(
         return jax.jit(
             shard_map(
                 body, mesh=mesh, in_specs=in_specs,
-                out_specs=(state_spec, P(axis), P()), check=False,
+                out_specs=(state_spec, P(axis), P()),
             ),
             donate_argnums=(0,),
         )

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import logging
 from collections.abc import Iterator
 from typing import Any, Mapping, Sequence
 
@@ -383,14 +384,23 @@ class AggResult:
         }
         with key_dtype_context(self.by.key_dtype):
             if mesh is not None:
-                left, right, sent, axis, world = _mesh_merge_join(
+                left, right, exchange, axis, world = _mesh_merge_join(
                     self._ordered_state(), other._ordered_state(),
                     mesh, mesh_axis, how=how, backend=backend,
                 )
                 stats = dataclasses.replace(
-                    stats, rows_exchanged=stats.rows_exchanged + sent
+                    stats,
+                    rows_exchanged=(stats.rows_exchanged
+                                    + exchange["rows_exchanged"]),
+                    exchange_quota=max(stats.exchange_quota,
+                                       exchange["quota"]),
+                    exchange_max_fill=max(stats.exchange_max_fill,
+                                          exchange["max_fill"]),
+                    exchange_retries=(stats.exchange_retries
+                                      + exchange["retries"]),
                 )
-                plan["mesh"] = {"axis": axis, "world": world}
+                plan["mesh"] = {"axis": axis, "world": world,
+                                "exchange": exchange}
             else:
                 left, right = mj_mod.merge_join(
                     self._ordered_state(), other._ordered_state(),
@@ -597,13 +607,19 @@ class JoinResult:
 def _mesh_merge_join(a: AggState, b: AggState, mesh, mesh_axis, *,
                      how: str, backend: str):
     """Mesh-sharded merge join: joint sampled cuts → both sides through
-    the key-range exchange → per-owner local merge join (see
-    :func:`repro.distributed.groupby.sharded_merge_join_local`).  Returns
-    ``(left, right_or_None, rows_exchanged, axis, world)``; raises on any
-    shard's row loss (loud-overflow contract)."""
+    the CAPACITY-BOUNDED key-range exchange → per-owner local merge join
+    (see :func:`repro.distributed.groupby.sharded_merge_join_local`).
+    A send segment over either side's per-peer quota retries ONCE at the
+    next pow2 quotas with a loud log, then raises
+    (:class:`~repro.core.types.ExchangeOverflowError`); any other row
+    loss (an owner's matches over its output slice) raises immediately.
+    Returns ``(left, right_or_None, exchange, axis, world)`` where
+    ``exchange`` is a dict of host accounting (``rows_exchanged``,
+    ``quota``, ``max_fill``, ``retries``)."""
     from jax.sharding import PartitionSpec as P
 
     from repro.core.pipeline import resolve_mesh_axis
+    from repro.core.types import ExchangeOverflowError
     from repro.distributed import groupby as gb_mod
     from repro.distributed._compat import shard_map
 
@@ -620,15 +636,50 @@ def _mesh_merge_join(a: AggState, b: AggState, mesh, mesh_axis, *,
     a, b = prep(a), prep(b)
     spec = AggState(keys=P(axis), count=P(axis), sum=P(axis, None),
                     min=P(axis, None), max=P(axis, None))
+    cap_a, cap_b = a.capacity // world, b.capacity // world
+    q_a = gb_mod.default_exchange_quota(cap_a, world)
+    q_b = gb_mod.default_exchange_quota(cap_b, world)
 
-    def body(a_, b_):
-        return gb_mod.sharded_merge_join_local(
-            a_, b_, axis, world, how=how, backend=backend
+    def sharded(qa, qb):
+        def body(a_, b_):
+            return gb_mod.sharded_merge_join_local(
+                a_, b_, axis, world, how=how, backend=backend,
+                quota_a=qa, quota_b=qb,
+            )
+
+        return shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                         out_specs=(spec, spec, P(), P(), P(), P()))
+
+    left, right, rows_sent, send_dropped, dropped, max_fill = (
+        sharded(q_a, q_b)(a, b))
+    retries = 0
+    if bool(send_dropped):
+        qa2 = min(gb_mod._pow2_ceil(q_a + 1), gb_mod._pow2_ceil(cap_a))
+        qb2 = min(gb_mod._pow2_ceil(q_b + 1), gb_mod._pow2_ceil(cap_b))
+        if qa2 <= q_a and qb2 <= q_b:
+            raise ExchangeOverflowError(
+                "mesh-sharded merge join exchange overflowed its per-peer "
+                f"quotas at the lossless ceiling (fullest segment "
+                f"{int(max_fill)} rows vs quotas {q_a}/{q_b})",
+                quota=max(q_a, q_b), max_fill=int(max_fill),
+            )
+        logging.getLogger(__name__).warning(
+            "mesh merge join exchange overflowed its per-peer quotas "
+            "%d/%d (fullest segment %d rows); retrying once at %d/%d",
+            q_a, q_b, int(max_fill), qa2, qb2,
         )
-
-    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec),
-                   out_specs=(spec, spec, P(), P()), check=False)
-    left, right, rows_sent, dropped = fn(a, b)
+        retries = 1
+        q_a, q_b = qa2, qb2
+        left, right, rows_sent, send_dropped, dropped, max_fill = (
+            sharded(q_a, q_b)(a, b))
+        if bool(send_dropped):
+            raise ExchangeOverflowError(
+                "mesh-sharded merge join exchange overflowed its per-peer "
+                f"quotas even after one retry at {q_a}/{q_b} (fullest "
+                f"segment {int(max_fill)} rows) — results would be "
+                "missing join keys",
+                quota=max(q_a, q_b), max_fill=int(max_fill),
+            )
     if bool(dropped):
         raise RuntimeError(
             "mesh-sharded merge join dropped rows: a key-range owner's "
@@ -636,7 +687,13 @@ def _mesh_merge_join(a: AggState, b: AggState, mesh, mesh_axis, *,
             "would be missing join keys.  Widen the inputs' capacity or "
             "join without mesh="
         )
-    return left, (right if how == "inner" else None), int(rows_sent), axis, world
+    exchange = {
+        "rows_exchanged": int(rows_sent),
+        "quota": max(q_a, q_b),
+        "max_fill": int(max_fill),
+        "retries": retries,
+    }
+    return left, (right if how == "inner" else None), exchange, axis, world
 
 
 def pipeline(steps):

@@ -379,6 +379,15 @@ class SpillStats:
     duplicate_rate: float = 0.0
     policy_switches: int = 0
     readbacks_paid: int = 0
+    # capacity-bounded exchange accounting (mesh-sharded pipeline; all 0
+    # for single-device plans): the per-peer send quota the exchange ran
+    # at (rows per shard->owner fragment), the fullest send segment
+    # actually observed (max over peers and shards — `max_fill / quota`
+    # is the sampled cuts' balance signal), and how many times a host
+    # entry point had to retry the exchange at a wider quota.
+    exchange_quota: int = 0
+    exchange_max_fill: int = 0
+    exchange_retries: int = 0
 
     @property
     def total_spill_rows(self) -> int:
@@ -413,6 +422,9 @@ class SpillStats:
             duplicate_rate=max(s.duplicate_rate for s in shards),
             policy_switches=sum(s.policy_switches for s in shards),
             readbacks_paid=sum(s.readbacks_paid for s in shards),
+            exchange_quota=max(s.exchange_quota for s in shards),
+            exchange_max_fill=max(s.exchange_max_fill for s in shards),
+            exchange_retries=sum(s.exchange_retries for s in shards),
         )
 
 
@@ -423,6 +435,22 @@ class MergeOverflowError(RuntimeError):
     catch broadly keep working; the streaming finalize/snapshot path
     catches *this* type specifically to auto-retry once at the next
     pow2 output capacity."""
+
+
+class ExchangeOverflowError(RuntimeError):
+    """The cross-shard exchange's per-peer send quota was too small for
+    at least one send segment (``exchange_dropped`` tripped): rows would
+    have been silently left behind on the sending shard.  The host entry
+    points (one-shot mesh aggregate, streaming finalize/snapshot, the
+    mesh merge join, and the distributed group-by) catch *this* type
+    specifically to retry ONCE at the next pow2 quota — a second
+    overflow propagates.  Carries the static ``quota`` the exchange ran
+    at and the observed ``max_fill`` so the retry can size itself."""
+
+    def __init__(self, message: str, *, quota: int, max_fill: int):
+        super().__init__(message)
+        self.quota = quota
+        self.max_fill = max_fill
 
 
 @jax.tree_util.register_dataclass
@@ -436,13 +464,15 @@ class DeviceSpillStats:
     until the caller asks for numbers.  :meth:`finalize` performs that one
     readback and returns the plain host :class:`SpillStats`.
 
-    Two device-side safety flags have no host twin — both mean rows were
-    (or would have been) silently lost, so ``finalize`` raises instead of
-    returning corrupt accounting: ``run_buffer_overflowed`` trips if run
-    generation needed more run slots than the preallocated stacked buffer
-    holds; ``merge_dropped_rows`` trips if the wide-merge index exceeded
-    its hard capacity (resident > index_rows + page_rows) and live rows
-    were trimmed.
+    Three device-side safety flags have no host twin — each means rows
+    were (or would have been) silently lost, so ``finalize`` raises
+    instead of returning corrupt accounting: ``run_buffer_overflowed``
+    trips if run generation needed more run slots than the preallocated
+    stacked buffer holds; ``merge_dropped_rows`` trips if the wide-merge
+    index exceeded its hard capacity (resident > index_rows + page_rows)
+    and live rows were trimmed; ``exchange_dropped`` trips if a
+    cross-shard send segment exceeded the per-peer exchange quota
+    (raised as the retryable :class:`ExchangeOverflowError`).
     """
 
     rows_spilled_run_generation: jax.Array
@@ -458,12 +488,19 @@ class DeviceSpillStats:
     merge_dropped_rows: jax.Array
     rows_exchanged: jax.Array
     rows_retired: jax.Array
+    # capacity-bounded exchange block: exchange_dropped is the third
+    # loud-failure flag (a send segment exceeded the per-peer quota);
+    # finalize raises ExchangeOverflowError on it so host entry points
+    # can retry once at a wider quota.
+    exchange_dropped: jax.Array
+    exchange_quota: jax.Array
+    exchange_max_fill: jax.Array
 
     @classmethod
     def zeros(cls) -> "DeviceSpillStats":
         z = jnp.int32(0)
         f = jnp.bool_(False)
-        return cls(z, z, z, z, z, z, z, f, z, f, f, z, z)
+        return cls(z, z, z, z, z, z, z, f, z, f, f, z, z, f, z, z)
 
     def cross_shard(self, axis_name: str) -> "DeviceSpillStats":
         """Reduce per-shard accounting to the global view inside a
@@ -490,6 +527,9 @@ class DeviceSpillStats:
             merge_dropped_rows=por(self.merge_dropped_rows),
             rows_exchanged=ps(self.rows_exchanged),
             rows_retired=ps(self.rows_retired),
+            exchange_dropped=por(self.exchange_dropped),
+            exchange_quota=pm(self.exchange_quota),
+            exchange_max_fill=pm(self.exchange_max_fill),
         )
 
     def finalize(self, *, entry_point: str = "finalize") -> SpillStats:
@@ -507,6 +547,17 @@ class DeviceSpillStats:
                 f"during {entry_point}; results would be missing rows "
                 "(this is a bug in the slot bound — please report input "
                 "sizes and ExecConfig)"
+            )
+        if bool(self.exchange_dropped):
+            raise ExchangeOverflowError(
+                f"the cross-shard exchange during {entry_point} overflowed "
+                f"its per-peer send quota ({int(self.exchange_max_fill)} "
+                f"rows in the fullest segment vs quota "
+                f"{int(self.exchange_quota)}); rows would have been left "
+                "behind — pass a larger exchange_quota (host entry points "
+                "retry once at the next pow2 automatically)",
+                quota=int(self.exchange_quota),
+                max_fill=int(self.exchange_max_fill),
             )
         if bool(self.merge_dropped_rows):
             if entry_point == "snapshot":
@@ -537,4 +588,6 @@ class DeviceSpillStats:
             max_index_occupancy=int(self.max_index_occupancy),
             rows_exchanged=int(self.rows_exchanged),
             rows_retired=int(self.rows_retired),
+            exchange_quota=int(self.exchange_quota),
+            exchange_max_fill=int(self.exchange_max_fill),
         )

@@ -3,6 +3,21 @@
 Newer jax exposes ``jax.shard_map`` (with ``check_vma=``); 0.4.x only has
 ``jax.experimental.shard_map.shard_map`` (with ``check_rep=``).  All
 distributed modules import :func:`shard_map` from here.
+
+The version gate also owns the replication-check DEFAULT, so call sites
+never hard-code ``check=False``:
+
+* 0.4.x ``check_rep`` has no replication rule for ``lax.while_loop``
+  (probed: ``check_rep=True`` over the wide merge's page loop fails with
+  ``NotImplementedError: No replication rule for while``), and every
+  sharded pipeline here carries one — so the default is OFF.  The stats
+  out_specs those programs return under ``P()`` are truly replicated
+  anyway (explicit psum/pmax before the return).
+* ``jax.shard_map``'s ``check_vma`` system handles control flow, so on
+  new-enough jax the default is ON (the checker is free correctness
+  coverage).  This is the "drop check_rep=False when the jax version is
+  bumped" ROADMAP item: bumping jax flips the default here, with no call
+  sites to chase.
 """
 from __future__ import annotations
 
@@ -16,10 +31,20 @@ except AttributeError:
 
     _CHECK_KW = "check_rep"
 
+# None = the jax default (on for check_vma); False = forced off for the
+# 0.4.x check_rep that cannot handle while_loop bodies.
+_CHECK_DEFAULT: bool | None = None if _CHECK_KW == "check_vma" else False
 
-def shard_map(f, *, mesh, in_specs, out_specs, check: bool | None = None):
-    """Wrap ``f`` with shard_map; ``check=False`` disables the replication
-    /varying-manual-axes check under whichever name this jax spells it."""
+_UNSET = object()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check=_UNSET):
+    """Wrap ``f`` with shard_map.  ``check`` overrides the version-gated
+    replication/varying-manual-axes check default (see module docstring)
+    under whichever keyword this jax spells it; ``check=None`` forces the
+    installed jax's own default."""
+    if check is _UNSET:
+        check = _CHECK_DEFAULT
     kw = {} if check is None else {_CHECK_KW: check}
     try:
         return _impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -162,7 +162,6 @@ def ep_moe_block(p, cfg: ModelConfig, x, mesh=None):
         mesh=mesh,
         in_specs=(pspec, P(dpspec, None, None)),
         out_specs=(P(dpspec, None, None), P()),
-        check=False,
     )
     y, aux = shard_fn({k: p[k] for k in pspec}, x)
     if m.num_shared_experts:

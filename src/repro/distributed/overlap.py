@@ -52,7 +52,6 @@ def ring_allgather_matmul(mesh, axis: str = "model"):
         local, mesh=mesh,
         in_specs=(P(axis, None), P(None, None)),
         out_specs=P(None, None),
-        check=False,
     )
 
 
@@ -67,5 +66,4 @@ def reference_allgather_matmul(mesh, axis: str = "model"):
         local, mesh=mesh,
         in_specs=(P(axis, None), P(None, None)),
         out_specs=P(None, None),
-        check=False,
     )

@@ -95,7 +95,7 @@ def make_pipeline(mesh, apply_layer, n_layers: int, axis: str = "pod",
             in_specs=(P(axis), P()),   # params layer-split across stages
             out_specs=P(),
         )
-        fn = shard_map(local, check=False, **kw)
+        fn = shard_map(local, **kw)
         return fn(params, x)
 
     return run

@@ -163,3 +163,77 @@ def opt_state_specs(param_specs, opt_name: str):
         m = jax.tree.map(rows, param_specs, is_leaf=lambda x: isinstance(x, P))
         v = jax.tree.map(cols, param_specs, is_leaf=lambda x: isinstance(x, P))
     return step_spec, m, v
+
+
+# ---------------------------------------------------------------------------
+# multi-host entry path (jax.distributed)
+# ---------------------------------------------------------------------------
+#
+# The mesh-sharded aggregation pipeline is written entirely in
+# shard_map-over-named-axis terms, so spanning hosts needs exactly two
+# things: jax.distributed.initialize() before any backend touch, and a
+# mesh over jax.devices() (GLOBAL devices once initialized).  Everything
+# else — the capacity-bounded exchange, the page-streamed fragment
+# merge, the psum/pmax stats reduce — is host-count agnostic.
+
+
+def init_distributed(
+    *,
+    coordinator_address: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+    local_device_ids=None,
+) -> bool:
+    """Initialize :mod:`jax.distributed` for multi-host meshes.
+
+    Arguments default from the environment (``REPRO_COORDINATOR``,
+    ``REPRO_NUM_PROCESSES``, ``REPRO_PROCESS_ID``), matching the launch
+    driver's recipe::
+
+        REPRO_COORDINATOR=host0:1234 REPRO_NUM_PROCESSES=2 \
+        REPRO_PROCESS_ID=0 python -m repro.launch.shard_agg ...
+
+    Single-process runs (no coordinator configured, or one process) are
+    a NO-OP returning False — the same code path then runs on whatever
+    local devices exist, which is what the fake-device CI tests do.
+    Idempotent: a second call after successful initialization returns
+    True without re-initializing (jax raises otherwise)."""
+    import os
+
+    if coordinator_address is None:
+        coordinator_address = os.environ.get("REPRO_COORDINATOR")
+    if num_processes is None:
+        env = os.environ.get("REPRO_NUM_PROCESSES")
+        num_processes = int(env) if env else None
+    if process_id is None:
+        env = os.environ.get("REPRO_PROCESS_ID")
+        process_id = int(env) if env else None
+    if coordinator_address is None or not num_processes or num_processes == 1:
+        return False
+    state = getattr(jax.distributed, "global_state", None)
+    if state is not None and getattr(state, "client", None) is not None:
+        return True  # already initialized (idempotent entry)
+    jax.distributed.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+        local_device_ids=local_device_ids,
+    )
+    return True
+
+
+def data_mesh(axis: str = "shard"):
+    """A 1-D mesh over ALL global devices (every process's, once
+    :func:`init_distributed` ran) — the world the aggregation pipeline
+    shards over."""
+    return jax.make_mesh((jax.device_count(),), (axis,))
+
+
+def host_local_array(x, mesh, spec):
+    """Build a global sharded array from this process's LOCAL batch shard
+    (``jax.make_array_from_process_local_data``): each host contributes
+    its slice of the leading axis, no cross-host copy of input data.  On
+    a single process this is an ordinary ``device_put`` under the
+    sharding."""
+    sharding = NamedSharding(mesh, spec)
+    return jax.make_array_from_process_local_data(sharding, x)

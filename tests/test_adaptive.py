@@ -230,6 +230,25 @@ def test_governor_config_validation():
         GovernorConfig(start="traditional", arms=("early_agg", "rs"))
 
 
+def test_governor_refused_at_construction_when_it_cannot_steer():
+    """Satellite contract: a governor that would silently never steer is
+    refused AT CONSTRUCTION, not discovered via a bench that lies — a
+    fixed-policy stream ignores it, and mesh= streams have no
+    cross-shard observation reduce yet."""
+    gov = PolicyGovernor(CFG)
+    with pytest.raises(ValueError, match="fixed policy 'rs'"):
+        pipeline.StreamingAggregator(CFG, policy="rs", key_dtype=np.uint32,
+                                     governor=gov)
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="mesh"):
+        pipeline.StreamingAggregator(CFG, policy="rs", key_dtype=np.uint32,
+                                     governor=gov, mesh=mesh)
+    # adaptive + mesh refuses too (pre-existing contract, now symmetric)
+    with pytest.raises(ValueError, match="adaptive"):
+        pipeline.StreamingAggregator(CFG, policy="adaptive",
+                                     key_dtype=np.uint32, mesh=mesh)
+
+
 # ---------------------------------------------------------------------------
 # engine integration: parity on every decision path
 # ---------------------------------------------------------------------------
